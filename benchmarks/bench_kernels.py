@@ -1,0 +1,60 @@
+"""Kernel microbenchmarks (CPU proxies).
+
+The Pallas kernels target TPU; on this CPU-only container we time the jnp
+oracle (the XLA path the dry-run lowers) and run the Pallas kernel once in
+interpret mode for a correctness pulse. Real-hardware numbers belong to a
+TPU run of the same entry points."""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def _time(f, *args, iters=5) -> float:
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # attention fwd: b=1 h=8 kv=2 s=1024 hd=128
+    q = jnp.asarray(rng.normal(size=(1, 8, 1024, 128)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 2, 1024, 128)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 2, 1024, 128)).astype(np.float32))
+    us = _time(jax.jit(ops.attention_ref), q, k, v)
+    flops = 2 * 2 * 8 * 1024 * 1024 * 128
+    rows.append(("attention_xla_b1h8s1024", us,
+                 f"{flops / (us / 1e6) / 1e9:.1f} GFLOP/s CPU"))
+    out_i = ops.flash_attention(q[:, :, :256], k[:, :, :256], v[:, :, :256],
+                                block_q=128, block_k=128, interpret=True)
+    ref_i = ops.attention_ref(q[:, :, :256], k[:, :, :256], v[:, :, :256])
+    ok = bool(jnp.allclose(out_i, ref_i, rtol=2e-5, atol=2e-5))
+    rows.append(("flash_attention_pallas_interpret_s256", float("nan"),
+                 f"allclose_vs_ref={ok}"))
+
+    # decode against a 32k cache: b=4 h=8 kv=2 hd=128
+    C = 32768
+    kc = jnp.asarray(rng.normal(size=(4, 2, C, 128)).astype(np.float32))
+    vc = jnp.asarray(rng.normal(size=(4, 2, C, 128)).astype(np.float32))
+    qd = jnp.asarray(rng.normal(size=(4, 8, 1, 128)).astype(np.float32))
+    kpos = jnp.broadcast_to(jnp.arange(C)[None], (4, C)).astype(jnp.int32)
+    qpos = jnp.full((4, 1), C, jnp.int32)
+    us = _time(jax.jit(ops.decode_ref), qd, kc, vc, qpos, kpos)
+    bytes_moved = 2 * 4 * 2 * C * 128 * 4
+    rows.append(("decode_xla_b4_cache32k", us,
+                 f"{bytes_moved / (us / 1e6) / 1e9:.1f} GB/s CPU"))
+    return rows

@@ -1,0 +1,38 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits
+one row per (arch × shape × mesh): the three terms in seconds, the
+dominant bound, and MODEL_FLOPS/HLO_FLOPs. This bench does not compile
+anything — run the dry-run first."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List, Tuple
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        return [("roofline_table", float("nan"),
+                 "no dry-run artifacts; run repro.launch.dryrun first")]
+    for f in files:
+        with open(f) as fh:
+            d = json.load(fh)
+        if d.get("status") != "ok":
+            continue
+        r = d["roofline"]
+        name = f"roofline_{d['arch']}_{d['shape']}_{d['mesh']}"
+        bound_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.append((name, bound_s * 1e6,
+                     f"bound={r['bound']} c={r['compute_s']:.2e} "
+                     f"m={r['memory_s']:.2e} n={r['collective_s']:.2e} "
+                     f"useful={r['useful_frac']:.2f} "
+                     f"roofline={r['roofline_frac']:.2f}"))
+    return rows

@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/claim.
+
+Prints ``name,us_per_call,derived`` CSV:
+
+  bench_message_complexity  §9 tables (counter / OR-Set / MVR, + protocol)
+  bench_antientropy         Algorithm 1 vs Algorithm 2 under loss
+  bench_tensor_sync         tensor-lattice delta shipping + join throughput
+  bench_kernels             kernel microbenchmarks (CPU proxies)
+  bench_roofline            per-(arch × shape × mesh) roofline rows from
+                            the dry-run artifacts (run dryrun first)
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (bench_antientropy, bench_kernels,
+                   bench_message_complexity, bench_roofline,
+                   bench_tensor_sync)
+
+    modules = [
+        ("message_complexity", bench_message_complexity),
+        ("antientropy", bench_antientropy),
+        ("tensor_sync", bench_tensor_sync),
+        ("kernels", bench_kernels),
+        ("roofline", bench_roofline),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        t0 = time.perf_counter()
+        try:
+            rows = mod.run()
+        except Exception as e:  # report, keep going
+            failures += 1
+            print(f"{name}_FAILED,nan,{type(e).__name__}: {e}")
+            continue
+        for row_name, us, derived in rows:
+            print(f"{row_name},{us:.1f},{derived}")
+        dt = time.perf_counter() - t0
+        print(f"# {name} done in {dt:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

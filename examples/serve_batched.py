@@ -1,0 +1,14 @@
+"""Serving example: batched prefill + decode with ring KV caches, plus a
+δ-CRDT-replicated session table across 3 gateways on a lossy network.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "qwen1.5-0.5b", "--batch", "4",
+                "--prompt-len", "32", "--gen", "24", "--replicate", "3"]
+    main()

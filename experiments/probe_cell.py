@@ -1,0 +1,89 @@
+"""Fast perf-iteration probe: lower ONE layer-group of a cell and print the
+collective/memory breakdown. Usage:
+
+  PYTHONPATH=src python experiments/probe_cell.py <arch> <shape> [group_idx]
+      [--multi] [--attn chunked] [--micro N] [--donate]
+
+Iterating on the probe is seconds instead of minutes; the full cell is
+re-lowered with repro.launch.dryrun once a change wins on the probe.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse       # noqa: E402
+import dataclasses    # noqa: E402
+import sys            # noqa: E402
+
+from repro.configs import SHAPE_CASES, get_config  # noqa: E402
+from repro.dist import make_rules  # noqa: E402
+from repro.launch.dryrun import (_cell_costs, _lower_and_compile,
+                                 _memory_summary)  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.config import layout_groups  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("group", nargs="?", type=int, default=None)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--attn", default=None)
+    ap.add_argument("--moe", default=None)
+    ap.add_argument("--block", type=int, default=None)
+    ap.add_argument("--micro", type=int, default=1)
+    ap.add_argument("--full-depth", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.attn:
+        cfg = dataclasses.replace(cfg, attn_impl=args.attn)
+    if args.moe:
+        cfg = dataclasses.replace(cfg, moe_impl=args.moe)
+    if args.block:
+        cfg = dataclasses.replace(cfg, attn_block=args.block)
+    if not args.full_depth:
+        groups = layout_groups(cfg.default_layout())
+        if args.group is None:
+            # biggest group by repeats
+            gi = max(range(len(groups)), key=lambda i: groups[i][1])
+        else:
+            gi = args.group
+        block = groups[gi][0]
+        cfg = dataclasses.replace(cfg, layout=tuple(block),
+                                  n_layers=len(block))
+        print(f"probing group {gi}: {len(block)} layer(s) "
+              f"(full model: x{groups[gi][1]})")
+    case = SHAPE_CASES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi)
+    chips = int(len(mesh.devices.flat))
+    rules = make_rules(mesh)
+    import time
+    t0 = time.time()
+    lowered, compiled = _lower_and_compile(cfg, case, mesh, args.multi,
+                                           rules, args.micro)
+    costs = _cell_costs(compiled, chips)
+    mem = _memory_summary(compiled) or {}
+    print(f"compile {time.time()-t0:.1f}s | flops/chip {costs['flops']:.3e} "
+          f"| HBM {costs['bytes accessed']/1e9:.1f} GB "
+          f"| wire {costs['wire']/1e9:.2f} GB "
+          f"| temp {mem.get('temp_size_in_bytes', 0)/1e9:.1f} GB")
+    print("per-kind GB:", {k: round(v / 1e9, 2)
+                           for k, v in costs["per_kind"].items()})
+    print("counts:", costs["counts"])
+    # biggest collective shapes
+    import re
+    from collections import Counter
+    pat = re.compile(r"= ((?:\(?[a-z0-9]+\[[0-9,]*\])[^ ]*) (all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\(")
+    c = Counter()
+    for line in compiled.as_text().splitlines():
+        m = pat.search(line)
+        if m and "-done(" not in line:
+            c[f"{m.group(2)} {m.group(1)[:48]}"] += 1
+    for k, n in c.most_common(12):
+        print(f"  {n:3d}x {k}")
+
+
+if __name__ == "__main__":
+    main()

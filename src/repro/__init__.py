@@ -1,0 +1,10 @@
+"""repro — δ-CRDTs (Almeida, Shoker & Baquero 2014) as the replication
+substrate of a multi-pod JAX training/serving framework.
+
+Subpackages: core (the paper), models/configs (10 architectures),
+kernels (Pallas TPU), dist (sharding + roofline), sync (cross-pod δ
+runtime), checkpoint (delta-interval durable store), optim, data,
+runtime (step functions), launch (mesh / dryrun / train / serve).
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,196 @@
+"""Durable delta-interval checkpoint store.
+
+Layout (one directory per replica):
+
+    snapshot-<seq>.npz     full TensorState as of sequence <seq>
+    delta-<seq>.npz        the delta joined at sequence <seq>
+    manifest.json          {"seq": c, "snapshots": [...], "meta": {...}}
+
+Every write is write-temp + ``os.replace`` (atomic on POSIX), mirroring the
+paper's atomic durable transitions; the manifest is rewritten last, so a
+crash at ANY point leaves a consistent prefix:
+
+* crash before manifest update → the orphan snapshot/delta file is ignored;
+* restore = latest manifest'd snapshot ⊔ subsequent deltas (in sequence
+  order). Joins are idempotent, so an operator re-running a restore, or a
+  restore that races a replay, cannot corrupt state (same argument that
+  lets Algorithm 2 re-send delta-intervals).
+
+``state_from_pytree``/``pytree_from_state`` bridge model/optimizer pytrees
+to the chunked ``TensorState`` lattice.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..core.tensor_lattice import (ChunkedTensor, TensorState, chunk_tensor,
+                                   make_version, unchunk)
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> TensorState
+# ---------------------------------------------------------------------------
+
+def state_from_pytree(tree: Any, chunk_size: int, rank: int,
+                      lamport: int = 1) -> Tuple[TensorState, Dict[str, Any]]:
+    """Chunk every leaf; returns (state, spec) where spec records
+    shapes/dtypes for reconstruction."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    chunks: Dict[str, ChunkedTensor] = {}
+    spec: Dict[str, Any] = {"treedef": treedef, "leaves": {}}
+    version = make_version(lamport, rank)
+    for path, leaf in leaves:
+        name = jax.tree_util.keystr(path)
+        arr = np.asarray(leaf)
+        ct = chunk_tensor(arr, chunk_size)
+        chunks[name] = ChunkedTensor(
+            ct.values,
+            np.full((ct.values.shape[0],), version, dtype=np.int64))
+        spec["leaves"][name] = (arr.shape, str(arr.dtype))
+    return TensorState.of(chunks, lamport=lamport), spec
+
+
+def pytree_from_state(state: TensorState, spec: Dict[str, Any]) -> Any:
+    leaves = []
+    d = state.as_dict()
+    for name, (shape, dtype) in spec["leaves"].items():
+        ct = d[name]
+        leaves.append(np.asarray(unchunk(ct, tuple(shape))).astype(dtype))
+    return jax.tree_util.tree_unflatten(spec["treedef"], leaves)
+
+
+# ---------------------------------------------------------------------------
+# npz (de)serialization of TensorState
+# ---------------------------------------------------------------------------
+
+def _state_to_arrays(state: TensorState) -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {"__lamport__": np.asarray(state.lamport)}
+    for name, ct in state.chunks:
+        out[f"v::{name}"] = np.asarray(ct.values)
+        out[f"s::{name}"] = np.asarray(ct.versions)
+    return out
+
+
+def _state_from_arrays(arrs: Dict[str, np.ndarray]) -> TensorState:
+    chunks: Dict[str, ChunkedTensor] = {}
+    for key in arrs:
+        if key.startswith("v::"):
+            name = key[3:]
+            chunks[name] = ChunkedTensor(arrs[key], arrs[f"s::{name}"])
+    return TensorState.of(chunks, lamport=int(arrs["__lamport__"]))
+
+
+def _atomic_write(path: str, write_fn) -> None:
+    d = os.path.dirname(path)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            write_fn(f)
+        os.replace(tmp, path)  # atomic durable transition
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+class DeltaCheckpointStore:
+    """Algorithm-2-shaped durable store: (X at snapshot, delta log, seq c)."""
+
+    def __init__(self, directory: str):
+        self.dir = directory
+        os.makedirs(directory, exist_ok=True)
+
+    # -- manifest ----------------------------------------------------------------
+    def _manifest_path(self) -> str:
+        return os.path.join(self.dir, "manifest.json")
+
+    def _read_manifest(self) -> Dict[str, Any]:
+        try:
+            with open(self._manifest_path()) as f:
+                return json.load(f)
+        except FileNotFoundError:
+            return {"seq": -1, "snapshots": [], "deltas": [], "meta": {}}
+
+    def _write_manifest(self, m: Dict[str, Any]) -> None:
+        _atomic_write(self._manifest_path(),
+                      lambda f: f.write(json.dumps(m).encode()))
+
+    @property
+    def seq(self) -> int:
+        return self._read_manifest()["seq"]
+
+    # -- writes ---------------------------------------------------------------
+    def save_snapshot(self, state: TensorState, seq: int,
+                      meta: Optional[Dict[str, Any]] = None) -> None:
+        path = os.path.join(self.dir, f"snapshot-{seq:08d}.npz")
+        arrs = _state_to_arrays(state)
+        _atomic_write(path, lambda f: np.savez(f, **arrs))
+        m = self._read_manifest()
+        m["snapshots"] = sorted(set(m["snapshots"]) | {seq})
+        m["seq"] = max(m["seq"], seq)
+        if meta:
+            m["meta"].update(meta)
+        self._write_manifest(m)
+
+    def append_delta(self, delta: TensorState, seq: int) -> None:
+        m = self._read_manifest()
+        assert seq == m["seq"] + 1, (
+            f"delta log must be contiguous (got {seq}, have {m['seq']}) — "
+            "the causal delta-merging condition on disk")
+        path = os.path.join(self.dir, f"delta-{seq:08d}.npz")
+        arrs = _state_to_arrays(delta)
+        _atomic_write(path, lambda f: np.savez(f, **arrs))
+        m["deltas"] = sorted(set(m.get("deltas", [])) | {seq})
+        m["seq"] = seq
+        self._write_manifest(m)
+
+    # -- restore ---------------------------------------------------------------
+    def restore(self) -> Tuple[TensorState, int]:
+        """Latest snapshot ⊔ subsequent deltas. Idempotent by construction."""
+        m = self._read_manifest()
+        if not m["snapshots"]:
+            return TensorState.bottom(), m["seq"]
+        snap_seq = max(m["snapshots"])
+        with np.load(os.path.join(self.dir,
+                                  f"snapshot-{snap_seq:08d}.npz")) as z:
+            state = _state_from_arrays(dict(z))
+        for seq in sorted(m.get("deltas", [])):
+            if seq <= snap_seq:
+                continue
+            with np.load(os.path.join(self.dir, f"delta-{seq:08d}.npz")) as z:
+                state = state.join(_state_from_arrays(dict(z)))
+        return state, m["seq"]
+
+    # -- GC ------------------------------------------------------------------
+    def gc(self, keep_snapshots: int = 1) -> None:
+        """Drop snapshots older than the newest ``keep_snapshots`` and any
+        delta at/below the oldest kept snapshot (acked-by-disk prefix)."""
+        m = self._read_manifest()
+        snaps = sorted(m["snapshots"])
+        keep = snaps[-keep_snapshots:] if snaps else []
+        horizon = keep[0] if keep else -1
+        for s in snaps:
+            if s not in keep:
+                _try_unlink(os.path.join(self.dir, f"snapshot-{s:08d}.npz"))
+        kept_deltas = []
+        for d in sorted(m.get("deltas", [])):
+            if d <= horizon:
+                _try_unlink(os.path.join(self.dir, f"delta-{d:08d}.npz"))
+            else:
+                kept_deltas.append(d)
+        m["snapshots"] = keep
+        m["deltas"] = kept_deltas
+        self._write_manifest(m)
+
+
+def _try_unlink(path: str) -> None:
+    try:
+        os.unlink(path)
+    except FileNotFoundError:
+        pass

@@ -1,0 +1,122 @@
+"""Assigned input-shape cases and per-(arch × shape) input specs.
+
+The four LM shape cells (seq_len × global_batch):
+
+    train_4k      4,096 × 256    → lowers train_step
+    prefill_32k   32,768 × 32    → lowers serve prefill
+    decode_32k    32,768 × 128   → lowers serve_step (1 token + 32k cache)
+    long_500k     524,288 × 1    → lowers serve_step; sub-quadratic archs
+                                   only (cfg.subquadratic)
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no device allocation) for the dry-run; ``smoke_batch`` builds
+tiny concrete batches for the per-arch CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ModelConfig, init_caches
+
+
+@dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    seq: int
+    batch: int
+    step: str  # "train" | "prefill" | "decode"
+
+
+SHAPE_CASES: Dict[str, ShapeCase] = {
+    "train_4k": ShapeCase("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCase("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCase("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCase("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable(cfg: ModelConfig, case: ShapeCase) -> Tuple[bool, str]:
+    """Whether this (arch × shape) cell runs, and why not if it doesn't."""
+    if case.name == "long_500k" and not cfg.subquadratic:
+        return False, (f"{cfg.name}: full-attention decode state at 512k "
+                       "context is not sub-quadratic — skipped per the "
+                       "assignment (DESIGN.md §Arch-applicability)")
+    return True, ""
+
+
+def _tok_dtype():
+    return jnp.int32
+
+
+def input_specs(cfg: ModelConfig, case: ShapeCase) -> Dict[str, Any]:
+    """ShapeDtypeStruct pytree for the step function of this cell."""
+    b, s = case.batch, case.seq
+    f = jnp.dtype(cfg.dtype)
+    SDS = jax.ShapeDtypeStruct
+    if case.step in ("train", "prefill"):
+        if cfg.input_mode == "embeds":
+            batch = {"embeds": SDS((b, s, cfg.d_model), f)}
+            if case.step == "train":
+                batch["labels"] = SDS((b, s), _tok_dtype())
+        elif cfg.input_mode == "tokens+prefix":
+            st = s - cfg.prefix_len
+            batch = {"tokens": SDS((b, st), _tok_dtype()),
+                     "prefix_embeds": SDS((b, cfg.prefix_len, cfg.d_model), f)}
+            if case.step == "train":
+                batch["labels"] = SDS((b, st), _tok_dtype())
+        else:
+            batch = {"tokens": SDS((b, s), _tok_dtype())}
+            if case.step == "train":
+                batch["labels"] = SDS((b, s), _tok_dtype())
+        return batch
+
+    # decode: one new token against a seq-length cache
+    if cfg.input_mode == "embeds":
+        tok = SDS((b, 1, cfg.d_model), f)
+    else:
+        tok = SDS((b, 1), _tok_dtype())
+    caches = jax.eval_shape(lambda: init_caches(cfg, None, b, s))
+    return {"tokens": tok, "pos": SDS((b, 1), _tok_dtype()),
+            "caches": caches}
+
+
+# ---------------------------------------------------------------------------
+# Concrete tiny batches for smoke tests
+# ---------------------------------------------------------------------------
+
+def smoke_batch(cfg: ModelConfig, b: int = 2, s: int = 16,
+                seed: int = 0, train: bool = True) -> Dict[str, Any]:
+    rng = np.random.default_rng(seed)
+    f = jnp.dtype(cfg.dtype)
+    if cfg.input_mode == "embeds":
+        batch = {"embeds": jnp.asarray(
+            rng.normal(size=(b, s, cfg.d_model)).astype(np.float32), f)}
+        if train:
+            batch["labels"] = jnp.asarray(
+                rng.integers(0, cfg.vocab, size=(b, s)), jnp.int32)
+    elif cfg.input_mode == "tokens+prefix":
+        st = s - cfg.prefix_len
+        assert st > 0
+        batch = {
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab, size=(b, st)),
+                                  jnp.int32),
+            "prefix_embeds": jnp.asarray(
+                rng.normal(size=(b, cfg.prefix_len, cfg.d_model))
+                .astype(np.float32), f),
+        }
+        if train:
+            batch["labels"] = jnp.asarray(
+                rng.integers(0, cfg.vocab, size=(b, st)), jnp.int32)
+    else:
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, size=(b, s)), jnp.int32)}
+        if train:
+            batch["labels"] = jnp.asarray(
+                rng.integers(0, cfg.vocab, size=(b, s)), jnp.int32)
+    return batch

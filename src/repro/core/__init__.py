@@ -1,0 +1,37 @@
+"""δ-CRDT core — the paper's primary contribution.
+
+Layers:
+
+* ``dots``          — dots, compressed causal contexts (§7.2), dot stores,
+                      the generic causal join of Figs. 3b/4.
+* ``crdts``         — the datatype catalogue (counter Figs. 1-2, OR-Sets
+                      Figs. 3a/3b, MVRegister Fig. 4, + the library types
+                      the paper lists: GSet, 2PSet, PN, LWW, RWORSet,
+                      flags, ORMap).
+* ``antientropy``   — Algorithms 1 (basic) and 2 (causal delta-intervals),
+                      plus the classical full-state baseline.
+* ``sim``           — the §2 network model as a discrete-event simulator
+                      (loss, duplication, reordering, partitions,
+                      crash/recovery with durable state).
+* ``tensor_lattice``— join-semilattices over JAX pytrees: versioned chunk
+                      stores and dot-stores for replicating ML training
+                      state across pods (the framework integration).
+"""
+
+from .dots import CausalContext, Dot, DotFun, DotMap, DotSet, causal_join
+from .crdts import (ALL_CRDT_TYPES, AWORSet, AWORSetTombstone, DWFlag,
+                    DeltaCRDT, EWFlag, GCounter, GSet, LWWRegister, LWWSet,
+                    MVRegister, ORMap, PNCounter, RWORSet, TwoPSet)
+from .antientropy import (BasicNode, CausalNode, FullStateNode, converged,
+                          run_to_convergence)
+from .sim import NetConfig, NetStats, Node, Simulator, structural_size
+
+__all__ = [
+    "CausalContext", "Dot", "DotFun", "DotMap", "DotSet", "causal_join",
+    "ALL_CRDT_TYPES", "AWORSet", "AWORSetTombstone", "DWFlag", "DeltaCRDT",
+    "EWFlag", "GCounter", "GSet", "LWWRegister", "LWWSet", "MVRegister",
+    "ORMap", "PNCounter", "RWORSet", "TwoPSet",
+    "BasicNode", "CausalNode", "FullStateNode", "converged",
+    "run_to_convergence",
+    "NetConfig", "NetStats", "Node", "Simulator", "structural_size",
+]

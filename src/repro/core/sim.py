@@ -1,0 +1,199 @@
+"""Discrete-event simulator of the paper's network model (§2).
+
+The network is asynchronous and unreliable: messages can be **lost,
+duplicated, or reordered** (never corrupted); arbitrarily long partitions
+happen but eventually heal; if a node sends infinitely many messages,
+infinitely many get through. Nodes have durable storage, can crash, and
+recover with the durable content as of the last atomic state transition.
+
+The simulator drives ``Node`` subclasses (anti-entropy replicas, pods in the
+training runtime) with:
+
+* seeded randomness — every run is reproducible;
+* per-link loss / duplication probability and delay jitter (reordering
+  falls out of random delays);
+* time-windowed partitions;
+* crash / recover events that reset volatile state from durable state;
+* message / byte accounting (structural sizes) for the §9
+  message-complexity benchmarks.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import random
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Structural size accounting (the Õ(·) of §9: counts of atoms, ignoring
+# logarithmic factors in the size of integers and ids)
+# ---------------------------------------------------------------------------
+
+def structural_size(x: Any) -> int:
+    """Number of atomic entries in a (nested) CRDT value / message."""
+    if x is None:
+        return 0
+    if isinstance(x, (int, float, str, bool, bytes)):
+        return 1
+    if isinstance(x, (list, tuple, set, frozenset)):
+        return sum(structural_size(v) for v in x)
+    if isinstance(x, dict):
+        return sum(structural_size(k) + structural_size(v) for k, v in x.items())
+    if hasattr(x, "__dataclass_fields__"):
+        return sum(structural_size(getattr(x, f)) for f in x.__dataclass_fields__)
+    return 1
+
+
+@dataclass
+class NetConfig:
+    loss: float = 0.0          # P(drop) per transmission
+    dup: float = 0.0           # P(one extra copy) per delivered message
+    min_delay: float = 0.05
+    max_delay: float = 1.0
+    seed: int = 0
+
+
+@dataclass
+class NetStats:
+    sent: int = 0
+    delivered: int = 0
+    dropped: int = 0
+    duplicated: int = 0
+    bytes_sent: int = 0        # structural size of all sent payloads
+    by_kind: Dict[str, int] = field(default_factory=dict)
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    def record(self, kind: str, size: int) -> None:
+        self.sent += 1
+        self.bytes_sent += size
+        self.by_kind[kind] = self.by_kind.get(kind, 0) + 1
+        self.bytes_by_kind[kind] = self.bytes_by_kind.get(kind, 0) + size
+
+
+class Node:
+    """Base replica. Subclasses define durable/volatile state and handlers."""
+
+    def __init__(self, node_id: str):
+        self.id = node_id
+        self.sim: Optional["Simulator"] = None
+        self.alive = True
+
+    # -- wiring ---------------------------------------------------------------
+    def attach(self, sim: "Simulator") -> None:
+        self.sim = sim
+
+    def send(self, dst: str, msg: Any) -> None:
+        assert self.sim is not None
+        self.sim.send(self.id, dst, msg)
+
+    # -- handlers (override) ----------------------------------------------------
+    def on_receive(self, src: str, msg: Any) -> None:  # pragma: no cover
+        raise NotImplementedError
+
+    def on_periodic(self) -> None:  # pragma: no cover
+        pass
+
+    # -- crash model --------------------------------------------------------------
+    def durable_snapshot(self) -> Any:
+        """What survives a crash (atomic at each state transition)."""
+        return None
+
+    def recover(self, durable: Any) -> None:
+        """Reinitialise volatile state from durable state."""
+
+    def crash_and_recover(self) -> None:
+        self.recover(self.durable_snapshot())
+
+
+class Simulator:
+    def __init__(self, config: NetConfig = NetConfig()):
+        self.cfg = config
+        self.rng = random.Random(config.seed)
+        self.time = 0.0
+        self._q: List[Tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+        self.nodes: Dict[str, Node] = {}
+        self.stats = NetStats()
+        # partitions: list of (t_start, t_end, set_a, set_b); messages between
+        # the two sides are dropped while t in [t_start, t_end).
+        self.partitions: List[Tuple[float, float, frozenset, frozenset]] = []
+
+    # -- topology ------------------------------------------------------------
+    def add_node(self, node: Node) -> Node:
+        node.attach(self)
+        self.nodes[node.id] = node
+        return node
+
+    def add_partition(self, t_start: float, t_end: float,
+                      side_a: Iterable[str], side_b: Iterable[str]) -> None:
+        self.partitions.append((t_start, t_end, frozenset(side_a),
+                                frozenset(side_b)))
+
+    def _partitioned(self, src: str, dst: str) -> bool:
+        for t0, t1, a, b in self.partitions:
+            if t0 <= self.time < t1 and (
+                    (src in a and dst in b) or (src in b and dst in a)):
+                return True
+        return False
+
+    # -- scheduling ------------------------------------------------------------
+    def schedule(self, delay: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._q, (self.time + delay, next(self._seq), fn))
+
+    def every(self, interval: float, fn: Callable[[], None],
+              jitter: float = 0.1, until: float = float("inf")) -> None:
+        def tick():
+            if self.time >= until:
+                return
+            fn()
+            self.schedule(interval * (1.0 + self.rng.uniform(-jitter, jitter)),
+                          tick)
+        self.schedule(self.rng.uniform(0, interval), tick)
+
+    # -- transport ------------------------------------------------------------
+    def send(self, src: str, dst: str, msg: Any) -> None:
+        kind = msg[0] if isinstance(msg, tuple) and msg else type(msg).__name__
+        self.stats.record(str(kind), structural_size(msg))
+        if self._partitioned(src, dst) or self.rng.random() < self.cfg.loss:
+            self.stats.dropped += 1
+            return
+        copies = 1
+        if self.rng.random() < self.cfg.dup:
+            copies += 1
+            self.stats.duplicated += 1
+        for _ in range(copies):
+            delay = self.rng.uniform(self.cfg.min_delay, self.cfg.max_delay)
+
+            def deliver(dst=dst, src=src, msg=msg):
+                node = self.nodes.get(dst)
+                if node is not None and node.alive:
+                    self.stats.delivered += 1
+                    node.on_receive(src, msg)
+
+            self.schedule(delay, deliver)
+
+    # -- fault injection ----------------------------------------------------------
+    def crash(self, node_id: str, downtime: float) -> None:
+        node = self.nodes[node_id]
+        durable = node.durable_snapshot()
+        node.alive = False
+
+        def back_up():
+            node.alive = True
+            node.recover(durable)
+
+        self.schedule(downtime, back_up)
+
+    # -- run loop -------------------------------------------------------------
+    def run_until(self, t_end: float) -> None:
+        while self._q and self._q[0][0] <= t_end:
+            t, _, fn = heapq.heappop(self._q)
+            self.time = max(self.time, t)
+            fn()
+        self.time = max(self.time, t_end)
+
+    def run_for(self, dt: float) -> None:
+        self.run_until(self.time + dt)

@@ -1,0 +1,404 @@
+"""Join-semilattices over JAX tensors — the δ-CRDT ⇄ training-state bridge.
+
+Two lattices carry the framework's replicated ML state:
+
+1. ``TensorState`` — a *versioned chunk store*: every tensor is split into
+   fixed-size chunks, each tagged with a totally-ordered version
+   ``(lamport_counter, writer_rank)`` packed into one int64. The join keeps,
+   per chunk, the value with the larger version (pointwise LWW) — a
+   join-semilattice because versions are unique per write and the order is
+   total. This is the δ-CRDT the checkpointing and parameter-replication
+   layers gossip: a *delta* is a TensorState containing only touched
+   tensors, and the wire format (``pack_delta``) additionally drops
+   untouched chunks. The hot join path (`masked version merge`, one pass
+   over HBM) is the ``kernels/delta_join`` Pallas kernel on TPU; the jnp
+   fallback below is the oracle and the CPU path.
+
+2. ``DotSumStore`` — a grow-only map dot → update-pytree with join = union
+   (unique dots ⇒ no conflicts): the additive lattice used for cross-pod
+   pseudo-gradient aggregation (local-SGD / DiLoCo-style outer updates).
+   Its value is ``sum of all dots``; duplicates and reordering are absorbed
+   by the union. ``IntervalSum`` is its §7.2-style compression: under
+   causal delta-interval delivery (Algorithm 2), the explicit dot cloud
+   collapses to (version-vector, running sum) — property-tested equivalent
+   to the reference store.
+
+All lattice values implement ``join``/``leq``/``==`` so the generic
+anti-entropy nodes in ``repro.core.antientropy`` run unchanged over them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterable, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# version = (lamport << RANK_BITS) | writer_rank, stored in a jnp integer
+# array. Without jax_enable_x64 jnp canonicalizes int64 → int32, so keep the
+# rank field small enough that lamport gets ≥ 2^21 headroom (≈ 2M writes per
+# tensor-chunk lifetime; checkpoints reset clocks). 1024 writer ranks covers
+# pod-level replication (replicas are pods, not chips — see DESIGN.md §2).
+RANK_BITS = 10
+_RANK_MASK = (1 << RANK_BITS) - 1
+
+# jnp canonical integer dtype for version arrays (int32 unless x64 enabled).
+VERSION_DTYPE = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+
+
+def make_version(lamport: int, rank: int) -> int:
+    assert 0 <= rank < (1 << RANK_BITS)
+    return (int(lamport) << RANK_BITS) | int(rank)
+
+
+def version_lamport(v: int) -> int:
+    return int(v) >> RANK_BITS
+
+
+# ---------------------------------------------------------------------------
+# Versioned chunk store
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True, eq=False)
+class ChunkedTensor:
+    """One tensor as [n_chunks, chunk_size] values + [n_chunks] int64 versions.
+
+    Version 0 == ⊥ for that chunk (values must be zeros there).
+    """
+
+    values: jax.Array    # [n_chunks, chunk_size]
+    versions: jax.Array  # [n_chunks] int64
+
+    def __eq__(self, other: object) -> bool:
+        if not isinstance(other, ChunkedTensor):
+            return NotImplemented
+        return (self.values.shape == other.values.shape
+                and bool(np.array_equal(np.asarray(self.versions),
+                                        np.asarray(other.versions)))
+                and bool(np.array_equal(np.asarray(self.values),
+                                        np.asarray(other.values))))
+
+    def __hash__(self):  # pragma: no cover
+        raise TypeError("unhashable")
+
+
+def _join_chunked_impl(av, avers, bv, bvers):
+    """Pointwise LWW merge — the jnp oracle for kernels/delta_join."""
+    take_b = bvers > avers
+    out_v = jnp.where(take_b[:, None], bv, av)
+    out_vers = jnp.maximum(avers, bvers)
+    return out_v, out_vers
+
+
+_join_chunked = jax.jit(_join_chunked_impl)
+
+
+def chunk_tensor(x: np.ndarray, chunk_size: int,
+                 version: int = 0) -> ChunkedTensor:
+    flat = np.asarray(x).reshape(-1)
+    pad = (-len(flat)) % chunk_size
+    if pad:
+        flat = np.concatenate([flat, np.zeros(pad, flat.dtype)])
+    vals = jnp.asarray(flat.reshape(-1, chunk_size))
+    vers = jnp.full((vals.shape[0],), version, dtype=VERSION_DTYPE)
+    return ChunkedTensor(vals, vers)
+
+
+def unchunk(ct: ChunkedTensor, shape: Tuple[int, ...],
+            dtype=None) -> jax.Array:
+    n = int(np.prod(shape))
+    flat = ct.values.reshape(-1)[:n]
+    out = flat.reshape(shape)
+    return out.astype(dtype) if dtype is not None else out
+
+
+@dataclass(frozen=True, eq=False)
+class TensorState:
+    """The replicated-state lattice: name → ChunkedTensor (+ lamport clock).
+
+    ``lamport`` is replica-local bookkeeping used to mint fresh versions; it
+    rides along monotonically (max on join) and does not affect equality of
+    the CRDT payload semantics (two replicas holding identical chunk data
+    are converged regardless of their clocks — but we advance clocks on
+    join so new writes always supersede everything observed).
+    """
+
+    chunks: Tuple[Tuple[str, ChunkedTensor], ...] = ()
+    lamport: int = 0
+
+    @staticmethod
+    def bottom() -> "TensorState":
+        return TensorState()
+
+    @staticmethod
+    def of(mapping: Mapping[str, ChunkedTensor], lamport: int = 0) -> "TensorState":
+        return TensorState(tuple(sorted(mapping.items())), lamport)
+
+    def as_dict(self) -> Dict[str, ChunkedTensor]:
+        return dict(self.chunks)
+
+    # -- lattice ----------------------------------------------------------------
+    def join(self, other: "TensorState") -> "TensorState":
+        a, b = self.as_dict(), other.as_dict()
+        out: Dict[str, ChunkedTensor] = {}
+        for k in set(a) | set(b):
+            if k not in a:
+                out[k] = b[k]
+            elif k not in b:
+                out[k] = a[k]
+            else:
+                v, vers = _join_chunked(a[k].values, a[k].versions,
+                                        b[k].values, b[k].versions)
+                out[k] = ChunkedTensor(v, vers)
+        return TensorState.of(out, max(self.lamport, other.lamport))
+
+    def leq(self, other: "TensorState") -> bool:
+        a, b = self.as_dict(), other.as_dict()
+        for k, ct in a.items():
+            if k not in b:
+                if int(jnp.max(ct.versions)) > 0:
+                    return False
+                continue
+            if bool(jnp.any(ct.versions > b[k].versions)):
+                return False
+            # equal versions ⇒ equal values by construction (unique writes)
+        return True
+
+    def __eq__(self, other: object) -> bool:
+        if not isinstance(other, TensorState):
+            return NotImplemented
+        a, b = self.as_dict(), other.as_dict()
+        keys = set(a) | set(b)
+        for k in keys:
+            if k not in a or k not in b:
+                # missing key is equal to an all-⊥ tensor of the same shape
+                present = a.get(k, b.get(k))
+                if int(jnp.max(present.versions)) > 0:
+                    return False
+                continue
+            if a[k] != b[k]:
+                return False
+        return True
+
+    def __hash__(self):  # pragma: no cover
+        raise TypeError("unhashable")
+
+    # -- delta-mutator -----------------------------------------------------------
+    def write_delta(self, rank: int, name: str, new_values: Any,
+                    chunk_idx: Optional[np.ndarray] = None,
+                    chunk_size: Optional[int] = None) -> "TensorState":
+        """δ-mutator: (re)write tensor ``name`` (or a subset of its chunks).
+
+        Returns a delta containing ONLY the touched tensor, with touched
+        chunks carrying a fresh version and untouched chunks at ⊥
+        (version 0, zero values) — `X ⊔ delta` applies the write.
+        """
+        lam = self.lamport + 1
+        ver = make_version(lam, rank)
+        cur = self.as_dict().get(name)
+        if cur is None:
+            assert chunk_idx is None, "cannot partially write unknown tensor"
+            assert chunk_size is not None
+            ct = chunk_tensor(np.asarray(new_values), chunk_size, version=0)
+            vals, vers = ct.values, jnp.full((ct.values.shape[0],), ver,
+                                             dtype=VERSION_DTYPE)
+            delta_ct = ChunkedTensor(vals, vers)
+        else:
+            n_chunks, csz = cur.values.shape
+            if chunk_idx is None:
+                ct = chunk_tensor(np.asarray(new_values), csz)
+                assert ct.values.shape == cur.values.shape
+                delta_ct = ChunkedTensor(
+                    ct.values, jnp.full((n_chunks,), ver, dtype=VERSION_DTYPE))
+            else:
+                idx = jnp.asarray(chunk_idx, dtype=jnp.int32)
+                new_vals = jnp.asarray(new_values).reshape(len(chunk_idx), csz)
+                vals = jnp.zeros_like(cur.values).at[idx].set(new_vals)
+                vers = jnp.zeros((n_chunks,), dtype=VERSION_DTYPE).at[idx].set(ver)
+                delta_ct = ChunkedTensor(vals, vers)
+        return TensorState.of({name: delta_ct}, lamport=lam)
+
+    def write_full(self, rank: int, name: str, new_values: Any,
+                   chunk_idx: Optional[np.ndarray] = None,
+                   chunk_size: Optional[int] = None) -> "TensorState":
+        return self.join(self.write_delta(rank, name, new_values, chunk_idx,
+                                          chunk_size))
+
+
+# -- wire format --------------------------------------------------------------
+
+def pack_delta(delta: TensorState,
+               known_versions: Optional[Mapping[str, np.ndarray]] = None
+               ) -> Dict[str, Any]:
+    """Sparse wire encoding: per tensor, only chunks with version above ⊥
+    (and above the receiver's known version when supplied). This is the
+    §4.1 ``size(mᵟ(X)) ≪ size(X)`` payload."""
+    out: Dict[str, Any] = {"lamport": delta.lamport, "tensors": {}}
+    for name, ct in delta.chunks:
+        vers = np.asarray(ct.versions)
+        mask = vers > 0
+        if known_versions and name in known_versions:
+            mask &= vers > np.asarray(known_versions[name])
+        idx = np.nonzero(mask)[0]
+        if len(idx) == 0:
+            continue
+        out["tensors"][name] = (
+            idx.astype(np.int32),
+            np.asarray(ct.values)[idx],
+            vers[idx],
+            ct.values.shape,
+        )
+    return out
+
+
+def unpack_delta(wire: Dict[str, Any]) -> TensorState:
+    chunks: Dict[str, ChunkedTensor] = {}
+    for name, (idx, vals, vers, shape) in wire["tensors"].items():
+        dense_v = np.zeros(shape, dtype=vals.dtype)
+        dense_ver = np.zeros((shape[0],), dtype=np.int64)
+        dense_v[idx] = vals
+        dense_ver[idx] = vers
+        chunks[name] = ChunkedTensor(jnp.asarray(dense_v),
+                                     jnp.asarray(dense_ver))
+    return TensorState.of(chunks, lamport=wire["lamport"])
+
+
+def packed_size_bytes(wire: Dict[str, Any]) -> int:
+    total = 8
+    for name, (idx, vals, vers, _shape) in wire["tensors"].items():
+        total += len(name) + idx.nbytes + vals.nbytes + vers.nbytes
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Additive dot-store (pseudo-gradient aggregation) + §7.2-style compression
+# ---------------------------------------------------------------------------
+
+def _tree_equal(a, b) -> bool:
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    if ta != tb or len(la) != len(lb):
+        return False
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+@dataclass(frozen=True, eq=False)
+class DotSumStore:
+    """Grow-only map (producer, seq) → update pytree; join = union.
+
+    The lattice of cross-pod additive updates. ``total()`` — the quantity
+    the optimizer consumes — is the sum over all dots; because the store
+    is a *set* of uniquely-tagged contributions, duplicated or reordered
+    delivery cannot double-count (the paper's counter argument, §4.2).
+    """
+
+    dots: Tuple[Tuple[Tuple[str, int], Any], ...] = ()
+
+    @staticmethod
+    def bottom() -> "DotSumStore":
+        return DotSumStore()
+
+    def as_dict(self) -> Dict[Tuple[str, int], Any]:
+        return dict(self.dots)
+
+    def contribute_delta(self, producer: str, update: Any) -> "DotSumStore":
+        """δ-mutator: a fresh uniquely-dotted contribution."""
+        seq = 1 + max((s for (p, s), _ in self.dots if p == producer),
+                      default=0)
+        return DotSumStore((((producer, seq), update),))
+
+    def contribute_full(self, producer: str, update: Any) -> "DotSumStore":
+        return self.join(self.contribute_delta(producer, update))
+
+    def join(self, other: "DotSumStore") -> "DotSumStore":
+        merged = self.as_dict()
+        for dot, upd in other.dots:
+            if dot in merged:
+                continue  # unique dots ⇒ identical payload
+            merged[dot] = upd
+        return DotSumStore(tuple(sorted(merged.items(),
+                                        key=lambda kv: kv[0])))
+
+    def leq(self, other: "DotSumStore") -> bool:
+        od = other.as_dict()
+        return all(dot in od for dot, _ in self.dots)
+
+    def __eq__(self, other: object) -> bool:
+        if not isinstance(other, DotSumStore):
+            return NotImplemented
+        a, b = self.as_dict(), other.as_dict()
+        return set(a) == set(b) and all(_tree_equal(a[k], b[k]) for k in a)
+
+    def __hash__(self):  # pragma: no cover
+        raise TypeError("unhashable")
+
+    def total(self) -> Any:
+        if not self.dots:
+            return None
+        acc = jax.tree_util.tree_map(lambda x: jnp.asarray(x),
+                                     self.dots[0][1])
+        for _, upd in self.dots[1:]:
+            acc = jax.tree_util.tree_map(lambda a, b: a + jnp.asarray(b),
+                                         acc, upd)
+        return acc
+
+    def version_vector(self) -> Dict[str, int]:
+        vv: Dict[str, int] = {}
+        for (p, s), _ in self.dots:
+            vv[p] = max(vv.get(p, 0), s)
+        return vv
+
+
+class IntervalSum:
+    """§7.2-compressed DotSumStore: (per-producer contiguous prefix, sum).
+
+    NOT a free-standing semilattice — the sum cannot deduplicate arbitrary
+    overlaps — but under Algorithm-2 delivery (delta-intervals aligned with
+    the receiver's acked prefix: the causal delta-merging condition) it is
+    an exact, O(1)-memory encoding of the dot store. ``apply_interval``
+    enforces the condition and is idempotent for re-delivered intervals.
+    """
+
+    def __init__(self):
+        self.prefix: Dict[str, int] = {}
+        self.sum: Any = None
+
+    def apply_interval(self, producer: str, start_seq: int,
+                       updates: Iterable[Any]) -> bool:
+        """Apply contributions ``start_seq .. start_seq+len-1`` from
+        ``producer``. Returns True if applied; False if rejected (gap —
+        the merging condition X ⊒ Xʲᵃ does not hold) or fully stale."""
+        updates = list(updates)
+        have = self.prefix.get(producer, 0)
+        if start_seq - 1 > have:
+            return False                      # gap: would skip dots
+        end = start_seq + len(updates) - 1
+        if end <= have:
+            return True                       # duplicate: already absorbed
+        fresh = updates[have - (start_seq - 1):]  # drop already-applied prefix
+        for upd in fresh:
+            if self.sum is None:
+                self.sum = jax.tree_util.tree_map(
+                    lambda x: jnp.asarray(x).copy(), upd)
+            else:
+                self.sum = jax.tree_util.tree_map(
+                    lambda a, b: a + jnp.asarray(b), self.sum, upd)
+        self.prefix[producer] = end
+        return True
+
+    def matches(self, ref: DotSumStore, atol: float = 1e-6) -> bool:
+        """Exactness check against the reference dot store."""
+        if ref.version_vector() != {p: n for p, n in self.prefix.items()
+                                    if n > 0}:
+            return False
+        t = ref.total()
+        if t is None or self.sum is None:
+            return t is None and self.sum is None
+        la = jax.tree_util.tree_leaves(t)
+        lb = jax.tree_util.tree_leaves(self.sum)
+        return all(np.allclose(np.asarray(a), np.asarray(b), atol=atol)
+                   for a, b in zip(la, lb))

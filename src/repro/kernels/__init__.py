@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+* ``flash_attention`` — fused online-softmax attention (train/prefill fwd
+  + ring-cache decode with explicit slot positions). VMEM-tiled BlockSpecs,
+  GQA head mapping in the index maps, static skipping of fully-masked
+  tiles.
+* ``delta_join`` / ``chunk_digest`` — the δ-CRDT tensor-lattice join
+  (versioned-chunk LWW merge, the paper's hot loop at TPU scale: purely
+  bandwidth-bound, fused to ONE pass over HBM) and the per-chunk digests
+  the anti-entropy layer uses to pick delta contents.
+
+``ops`` carries the jit'd public wrappers (``interpret=`` for CPU
+validation); ``ref`` the pure-jnp oracles every kernel is swept against in
+tests/test_kernels_*.py.
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,225 @@
+"""Flash attention for TPU (Pallas): fused online-softmax attention.
+
+Two kernels:
+
+* ``flash_attention_fwd`` — train/prefill: causal (+ optional sliding
+  window, logit softcap) attention over [b, h, s, hd] with GQA head
+  mapping done in the BlockSpec index maps (no materialized kv repeat).
+  Grid = (b, q_heads, nq, nk); the innermost nk dimension iterates
+  sequentially on TPU, carrying the online-softmax state (m, l, acc) in
+  VMEM scratch. Fully-masked (q-block, k-block) tiles are skipped — for
+  causal attention that's ~half the tiles, and with a sliding window all
+  tiles outside the band.
+
+* ``flash_decode_fwd`` — single-token decode against a (ring-buffer) KV
+  cache with *explicit per-slot positions* (supports full caches and SWA
+  ring caches uniformly, matching ``models/attention.py`` semantics).
+
+VMEM budget per grid step (defaults bq=bk=128, hd=128, fp32 scratch):
+q/k/v tiles ≈ 3·128·128·2B = 96 KiB + acc/m/l ≈ 66 KiB — comfortably
+inside the ~16 MiB VMEM of a TPU core, with room for double-buffering.
+Block sizes are multiples of (8, 128) so the MXU/VPU tiles are aligned.
+
+The pure-jnp oracle lives in ``ref.py``; ``ops.py`` exposes jit'd wrappers
+with an ``interpret=`` switch (CPU validation — this container has no TPU).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+# ---------------------------------------------------------------------------
+# Train / prefill kernel
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                scale: float, window: Optional[int],
+                softcap: Optional[float], bq: int, bk: int, nk: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # block-level skip: tile entirely above the diagonal, or entirely
+    # outside the sliding-window band
+    q_start = iq * bq
+    k_start = ik * bk
+    not_above = k_start <= q_start + (bq - 1)           # some k ≤ some q
+    in_band = True if window is None else \
+        (q_start - (k_start + bk - 1)) < window          # some q-k < window
+    live = jnp.logical_and(not_above, in_band) if window is not None \
+        else not_above
+
+    @pl.when(live)
+    def _work():
+        q = q_ref[0, 0].astype(jnp.float32)              # [bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)              # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos <= qpos
+        if window is not None:
+            mask = jnp.logical_and(mask, (qpos - kpos) < window)
+        s_masked = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s_masked, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)                  # ≤ 1, no NaN (finite)
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe_l = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0, :, :] = (acc_scr[...] / safe_l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        scale: Optional[float] = None,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool = False) -> jax.Array:
+    """q [b, h, sq, hd]; k, v [b, kv, sk, hd] (GQA: h % kv == 0). Causal."""
+    b, h, sq, hd = q.shape
+    _, kv, sk, _ = k.shape
+    assert h % kv == 0
+    G = h // kv
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    nq, nk = sq // bq, sk // bk
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+
+    kernel = functools.partial(_fwd_kernel, scale=scale, window=window,
+                               softcap=softcap, bq=bq, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda ib, ih, iq, ik: (ib, ih // G, ik, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda ib, ih, iq, ik: (ib, ih // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Decode kernel (explicit per-slot positions — ring caches)
+# ---------------------------------------------------------------------------
+
+def _decode_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *,
+                   scale: float, window: Optional[int],
+                   softcap: Optional[float], bk: int, nk: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # [1, hd]
+    k = k_ref[0, 0].astype(jnp.float32)                  # [bk, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = qpos_ref[0, 0]                                # scalar int32
+    kpos = kpos_ref[0]                                   # [bk]
+    mask = jnp.logical_and(kpos >= 0, kpos <= qpos)
+    if window is not None:
+        mask = jnp.logical_and(mask, (qpos - kpos) < window)
+    mask = mask[None, :]
+    s_masked = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s_masked, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + \
+        jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe_l = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0, :, :] = (acc_scr[...] / safe_l[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                     q_pos: jax.Array, k_pos: jax.Array, *,
+                     scale: Optional[float] = None,
+                     window: Optional[int] = None,
+                     softcap: Optional[float] = None,
+                     block_k: int = 128,
+                     interpret: bool = False) -> jax.Array:
+    """q [b, h, 1, hd]; k, v [b, kv, C, hd]; q_pos [b, 1]; k_pos [b, C]."""
+    b, h, one, hd = q.shape
+    assert one == 1
+    _, kv, C, _ = k.shape
+    G = h // kv
+    bk = min(block_k, C)
+    assert C % bk == 0
+    nk = C // bk
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, window=window,
+                               softcap=softcap, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda ib, ih, ik: (ib, 0)),
+            pl.BlockSpec((1, bk), lambda ib, ih, ik: (ib, ik)),
+            pl.BlockSpec((1, 1, 1, hd), lambda ib, ih, ik: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda ib, ih, ik: (ib, ih // G, ik, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda ib, ih, ik: (ib, ih // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd),
+                               lambda ib, ih, ik: (ib, ih, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos, k_pos, q, k, v)

@@ -1,0 +1,69 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret=`` selects Pallas interpret mode (CPU validation; this
+container has no TPU). On TPU hardware call with ``interpret=False``.
+``use_pallas_default()`` is consulted by the model stack: XLA fallbacks
+(the same math, from the oracles) are used for the 512-device dry-run,
+because a TPU Mosaic kernel does not compile on the CPU backend.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .delta_join import chunk_digest as _chunk_digest
+from .delta_join import delta_join as _delta_join
+from .flash_attention import flash_attention_fwd as _flash_fwd
+from .flash_attention import flash_decode_fwd as _flash_decode
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "softcap",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, scale: Optional[float] = None,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """Causal flash attention. q [b,h,s,hd]; k,v [b,kv,s,hd]."""
+    return _flash_fwd(q, k, v, scale=scale, window=window, softcap=softcap,
+                      block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "softcap",
+                                             "block_k", "interpret"))
+def flash_decode(q, k, v, q_pos, k_pos, *, scale: Optional[float] = None,
+                 window: Optional[int] = None,
+                 softcap: Optional[float] = None,
+                 block_k: int = 128, interpret: bool = False):
+    """One-token decode against a (ring) KV cache with slot positions."""
+    return _flash_decode(q, k, v, q_pos, k_pos, scale=scale, window=window,
+                         softcap=softcap, block_k=block_k,
+                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def delta_join(a_vals, a_vers, b_vals, b_vers, *, block_n: int = 256,
+               interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Fused versioned-chunk LWW merge (the δ-CRDT tensor join hot loop)."""
+    return _delta_join(a_vals, a_vers, b_vals, b_vers, block_n=block_n,
+                       interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def chunk_digest(x, *, block_n: int = 256,
+                 interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Per-chunk (max|x|, Σx²) in one pass — delta-selection digests."""
+    return _chunk_digest(x, block_n=block_n, interpret=interpret)
+
+
+# re-export the oracles for convenience
+attention_ref = ref.attention_ref
+decode_ref = ref.decode_ref
+delta_join_ref = ref.delta_join_ref
+chunk_digest_ref = ref.chunk_digest_ref

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -2.0 ** 30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  scale: Optional[float] = None,
+                  window: Optional[int] = None,
+                  softcap: Optional[float] = None) -> jax.Array:
+    """Causal attention oracle. q [b,h,sq,hd]; k,v [b,kv,sk,hd]."""
+    b, h, sq, hd = q.shape
+    _, kv, sk, _ = k.shape
+    G = h // kv
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = kpos <= qpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)) \
+        .astype(q.dtype)
+
+
+def decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+               q_pos: jax.Array, k_pos: jax.Array, *,
+               scale: Optional[float] = None,
+               window: Optional[int] = None,
+               softcap: Optional[float] = None) -> jax.Array:
+    """Decode oracle with explicit slot positions (ring caches).
+    q [b,h,1,hd]; k,v [b,kv,C,hd]; q_pos [b,1]; k_pos [b,C]."""
+    b, h, _, hd = q.shape
+    _, kv, C, _ = k.shape
+    G = h // kv
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = (k_pos[:, None, :] >= 0) & (k_pos[:, None, :] <= q_pos[:, :, None])
+    if window is not None:
+        mask &= (q_pos[:, :, None] - k_pos[:, None, :]) < window
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    # rows with no valid slot → zeros (matches kernel's safe-divide)
+    any_valid = jnp.any(mask, axis=-1)[:, None, :, None]
+    return jnp.where(any_valid, out, 0.0).astype(q.dtype)
+
+
+def delta_join_ref(a_vals, a_vers, b_vals, b_vers) -> Tuple[jax.Array, jax.Array]:
+    take_b = b_vers > a_vers
+    return (jnp.where(take_b[:, None], b_vals, a_vals),
+            jnp.maximum(a_vers, b_vers))
+
+
+def chunk_digest_ref(x) -> Tuple[jax.Array, jax.Array]:
+    xf = x.astype(jnp.float32)
+    return jnp.max(jnp.abs(xf), axis=-1), jnp.sum(xf * xf, axis=-1)

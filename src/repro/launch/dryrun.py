@@ -1,0 +1,349 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST set the placeholder-device flag before ANY other import (jax locks the
+device count at first init)."""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from typing import Any, Dict, Optional, Tuple  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import (ARCH_IDS, SHAPE_CASES, applicable, get_config,
+                           input_specs)  # noqa: E402
+from repro.dist import (collective_bytes, make_rules, param_pspecs,
+                        roofline)  # noqa: E402
+from repro.dist.hlo import collective_count  # noqa: E402
+from repro.dist.shardings import batch_pspecs, named  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import init_model  # noqa: E402
+from repro.models.hints import activation_rules, default_rules  # noqa: E402
+from repro.optim import AdamWConfig  # noqa: E402
+from repro.optim.adamw import opt_state_pspecs  # noqa: E402
+from repro.runtime import (TrainConfig, make_decode_fn, make_prefill_fn,
+                           make_train_step)  # noqa: E402
+
+
+def abstract_model(cfg) -> Tuple[Any, Any]:
+    """Parameter ShapeDtypeStructs + logical-axis tree, zero allocation.
+
+    init_model runs under eval_shape (abstract); the logical-spec tree is
+    captured through a side channel during tracing."""
+    side: Dict[str, Any] = {}
+
+    def build(key):
+        params, specs = init_model(cfg, key)
+        side["specs"] = specs
+        return params
+
+    params_sds = jax.eval_shape(build, jax.random.PRNGKey(0))
+    return params_sds, side["specs"]
+
+
+def abstract_opt_state(params_sds) -> Any:
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return {
+        "m": jax.tree_util.tree_map(f32, params_sds),
+        "v": jax.tree_util.tree_map(f32, params_sds),
+        "master": jax.tree_util.tree_map(f32, params_sds),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def _normalize_cost(cost) -> Dict[str, float]:
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    return dict(cost) if cost else {}
+
+
+def _memory_summary(compiled) -> Optional[Dict[str, float]]:
+    try:
+        ma = compiled.memory_analysis()
+        if ma is None:
+            return None
+        out = {}
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            if hasattr(ma, k):
+                out[k] = float(getattr(ma, k))
+        return out or None
+    except Exception:
+        return None
+
+
+def _lower_and_compile(cfg, case, mesh, multi_pod: bool, rules,
+                       microbatches: int = 1):
+    """Shared lowering path for the full model and the cost probes.
+
+    Buffer donation mirrors production training: params/opt-state are
+    donated in train_step and caches in serve_step, so the live-buffer
+    analysis reflects in-place updates."""
+    serve_mode = False
+    if case.step != "train" and rules.candidates.get("embed"):
+        # Replicate params over the batch axes at inference ONLY if
+        # (i) the model-axis-sharded copy fits per chip (bf16, 12 GB
+        # headroom) and (ii) the batch actually occupies the data axes
+        # (at batch 1 the FSDP gathers are negligible and replication
+        # just multiplies HBM reads — measured on jamba long_500k).
+        total_params, _ = cfg.param_counts()
+        n_devices = int(len(mesh.devices.flat))
+        dp = n_devices // mesh.shape["model"]
+        if (total_params * 2 / mesh.shape["model"] <= 12e9
+                and case.batch >= dp):
+            rules = make_rules(mesh, serve=True)
+            serve_mode = True
+    params_sds, logical = abstract_model(cfg)
+    p_pspecs = param_pspecs(params_sds, logical, rules)
+    p_sh = named(p_pspecs, mesh)
+    batch_sds = input_specs(cfg, case)
+    b_pspecs = batch_pspecs(batch_sds, rules)
+    b_sh = named(b_pspecs, mesh)
+
+    with mesh, activation_rules(mesh, default_rules(multi_pod,
+                                                     serve=serve_mode)):
+        if case.step == "train":
+            step_fn = make_train_step(cfg, TrainConfig(
+                optimizer=AdamWConfig(), microbatches=microbatches))
+            opt_sds = abstract_opt_state(params_sds)
+            o_sh = named(opt_state_pspecs(p_pspecs), mesh)
+            met_sh = {k: NamedSharding(mesh, P())
+                      for k in ("loss", "grad_norm", "lr")}
+            jitted = jax.jit(step_fn,
+                             in_shardings=(p_sh, o_sh, b_sh),
+                             out_shardings=(p_sh, o_sh, met_sh),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_sds, opt_sds, batch_sds)
+        elif case.step == "prefill":
+            step_fn = make_prefill_fn(cfg, max_len=case.seq)
+            jitted = jax.jit(step_fn, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(params_sds, batch_sds)
+        else:
+            step_fn = make_decode_fn(cfg)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(p_sh, b_sh["tokens"],
+                                           b_sh["pos"], b_sh["caches"]),
+                             donate_argnums=(3,))
+            lowered = jitted.lower(params_sds, batch_sds["tokens"],
+                                   batch_sds["pos"], batch_sds["caches"])
+        return lowered, lowered.compile()
+
+
+def _cell_costs(compiled, chips: int):
+    cost = _normalize_cost(compiled.cost_analysis())
+    hlo = compiled.as_text()
+    wire, per_kind = collective_bytes(hlo, chips)
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes accessed": float(cost.get("bytes accessed", 0.0)),
+            "wire": wire, "per_kind": per_kind,
+            "counts": collective_count(hlo)}
+
+
+def _probe_corrected_costs(cfg, case, mesh, multi_pod, chips,
+                           microbatches) -> Dict[str, Any]:
+    """XLA counts a scan body once regardless of trip count, so the full
+    compile under-reports flops/bytes/collectives for scanned layer stacks
+    (verified empirically: an 8-iteration scan of 512³ matmuls reports one
+    matmul). Reconstruct compositionally:
+
+        total = C0 + Σ_groups repeats_i · (C_only-group-i − C0)
+
+    where every probe has trip count 1 (counted exactly once = exact)."""
+    import dataclasses
+    from repro.models.config import layout_groups as _lg
+
+    groups = _lg(cfg.default_layout())
+    rules0 = make_rules(mesh)
+    cfg0 = dataclasses.replace(cfg, layout=(), n_layers=0)
+    _, comp0 = _lower_and_compile(cfg0, case, mesh, multi_pod, rules0,
+                                  microbatches)
+    C0 = _cell_costs(comp0, chips)
+
+    total = {"flops": C0["flops"], "bytes accessed": C0["bytes accessed"],
+             "wire": C0["wire"],
+             "per_kind": dict(C0["per_kind"])}
+    for block, repeats in groups:
+        cfg_i = dataclasses.replace(cfg, layout=tuple(block),
+                                    n_layers=len(block))
+        _, comp_i = _lower_and_compile(cfg_i, case, mesh, multi_pod,
+                                       make_rules(mesh), microbatches)
+        Ci = _cell_costs(comp_i, chips)
+        for k in ("flops", "bytes accessed", "wire"):
+            total[k] += repeats * max(0.0, Ci[k] - C0[k])
+        for kind, v in Ci["per_kind"].items():
+            base = C0["per_kind"].get(kind, 0.0)
+            total["per_kind"][kind] = total["per_kind"].get(kind, 0.0) + \
+                repeats * max(0.0, v - base)
+    if microbatches > 1 and case.step == "train":
+        # the gradient-accumulation scan body is also counted once; scale
+        # by the trip count (overcounts the outside-the-scan optimizer by
+        # (μ-1)·opt — ~1-2% at these scales, noted in EXPERIMENTS.md)
+        for k in ("flops", "bytes accessed", "wire"):
+            total[k] *= microbatches
+        total["per_kind"] = {k: v * microbatches
+                             for k, v in total["per_kind"].items()}
+    return total
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             out_dir: Optional[str] = None,
+             microbatches: int = 1,
+             save_hlo: bool = False,
+             overrides: Optional[Dict[str, Any]] = None,
+             tag_suffix: str = "") -> Dict[str, Any]:
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if overrides:
+        cfg = _dc.replace(cfg, **overrides)
+    case = SHAPE_CASES[shape]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    ok, reason = applicable(cfg, case)
+    if not ok:
+        res = {"arch": arch, "shape": shape, "mesh": mesh_name,
+               "status": "skipped", "reason": reason}
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            tag = f"{arch}_{shape}_{mesh_name}{tag_suffix}".replace("/", "-")
+            with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+                json.dump(res, f, indent=1)
+        return res
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(len(mesh.devices.flat))
+    rules = make_rules(mesh)
+
+    total_params, active_params = cfg.param_counts()
+    if case.step == "train":
+        tokens = case.batch * case.seq
+        model_flops = 6.0 * active_params * tokens
+    elif case.step == "prefill":
+        tokens = case.batch * case.seq
+        model_flops = 2.0 * active_params * tokens
+    else:
+        tokens = case.batch
+        model_flops = 2.0 * active_params * tokens
+
+    if case.step == "train" and microbatches > 1:
+        dp = chips // mesh.shape["model"]
+        assert case.batch % microbatches == 0 and \
+            (case.batch // microbatches) % dp == 0, (
+            f"microbatches={microbatches}: per-microbatch batch "
+            f"{case.batch // microbatches} must divide the {dp}-way "
+            f"data-parallel axes (max valid mu = {case.batch // dp})")
+
+    # 1. full-depth compile: proves sharding coherence + memory fit
+    lowered, compiled = _lower_and_compile(cfg, case, mesh, multi_pod,
+                                           rules, microbatches)
+    mem = _memory_summary(compiled)
+    hlo = compiled.as_text()
+    raw = _cell_costs(compiled, chips)
+
+    # 2. scan-corrected flops/bytes/collectives via trip-1 probes
+    corrected = _probe_corrected_costs(cfg, case, mesh, multi_pod, chips,
+                                       microbatches)
+    cost = {"flops": corrected["flops"],
+            "bytes accessed": corrected["bytes accessed"]}
+    wire, per_kind = corrected["wire"], corrected["per_kind"]
+    counts = raw["counts"]
+
+    rep = roofline(arch, shape, mesh_name, chips, cost, wire, per_kind,
+                   model_flops, tokens,
+                   peak_memory=(mem or {}).get("temp_size_in_bytes"))
+    result = {
+        "arch": arch, "shape": shape, "mesh": mesh_name, "status": "ok",
+        "chips": chips,
+        "compile_s": round(time.time() - t0, 1),
+        "cost_analysis": {k: cost.get(k) for k in
+                          ("flops", "bytes accessed", "transcendentals")
+                          if k in cost},
+        "cost_analysis_raw_scan_body_once": {
+            "flops": raw["flops"], "bytes accessed": raw["bytes accessed"],
+            "wire": raw["wire"]},
+        "memory_analysis": mem,
+        "collective_wire_bytes_per_chip": wire,
+        "collective_breakdown": per_kind,
+        "collective_counts": counts,
+        "params_total": total_params,
+        "params_active": active_params,
+        "model_flops_total": model_flops,
+        "roofline": json.loads(rep.to_json()),
+        "sharding_fallbacks": sorted(set(rules.fallbacks)),
+    }
+    if overrides:
+        result["overrides"] = {k: str(v) for k, v in overrides.items()}
+    result["microbatches"] = microbatches
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}_{shape}_{mesh_name}{tag_suffix}".replace("/", "-")
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(result, f, indent=1)
+        if save_hlo:
+            with open(os.path.join(out_dir, tag + ".hlo.txt"), "w") as f:
+                f.write(hlo)
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all",
+                    help=f"one of {ARCH_IDS} or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {list(SHAPE_CASES)} or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--attn-impl", default=None)
+    ap.add_argument("--moe-impl", default=None)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    overrides = {}
+    if args.attn_impl:
+        overrides["attn_impl"] = args.attn_impl
+    if args.moe_impl:
+        overrides["moe_impl"] = args.moe_impl
+
+    arches = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPE_CASES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in arches:
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch} × {shape} × {'2x16x16' if multi else '16x16'}"
+                try:
+                    res = run_cell(arch, shape, multi, out_dir=args.out,
+                                   microbatches=args.microbatches,
+                                   save_hlo=args.save_hlo,
+                                   overrides=overrides or None,
+                                   tag_suffix=args.tag)
+                    if res["status"] == "skipped":
+                        print(f"[skip] {tag}: {res['reason']}", flush=True)
+                    else:
+                        r = res["roofline"]
+                        print(f"[ ok ] {tag} compile={res['compile_s']}s "
+                              f"c={r['compute_s']:.3e}s m={r['memory_s']:.3e}s "
+                              f"n={r['collective_s']:.3e}s bound={r['bound']} "
+                              f"useful={r['useful_frac']:.2%}", flush=True)
+                except Exception as e:
+                    failures += 1
+                    print(f"[FAIL] {tag}: {type(e).__name__}: {e}",
+                          flush=True)
+                    traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

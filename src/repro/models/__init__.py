@@ -1,0 +1,12 @@
+"""Model zoo: one composable decoder implementation, ten architectures."""
+
+from .config import (LayerSpec, MLASpec, ModelConfig, MoESpec, SSMSpec,
+                     layout_groups)
+from .transformer import (decode_step, forward, init_caches, init_model,
+                          prefill, train_loss)
+
+__all__ = [
+    "LayerSpec", "MLASpec", "ModelConfig", "MoESpec", "SSMSpec",
+    "layout_groups", "decode_step", "forward", "init_caches", "init_model",
+    "prefill", "train_loss",
+]

@@ -1,0 +1,232 @@
+"""GQA attention with sliding windows, softcaps, bias, and KV caches.
+
+Three entry points share one masked-softmax core:
+
+* ``attend_full``   — training / prefill over the whole sequence (causal,
+                      optionally sliding-window) and optionally emits the
+                      KV cache for subsequent decode.
+* ``attend_decode`` — one new token against a cache. Caches are fixed-size
+                      ring buffers carrying each slot's absolute position,
+                      which uniformly handles full caches (capacity =
+                      max_len) and sliding-window caches (capacity =
+                      window ≪ max_len — mixtral long_500k decodes with a
+                      4k-slot ring, the sub-quadratic path).
+
+The XLA einsum path below is the reference; on TPU the same contraction is
+served by ``repro.kernels.flash_attention`` (Pallas) — selected via
+``impl=`` in the model stack (the dry-run lowers the XLA path; kernels are
+validated against ref.py in interpret mode).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .rope import apply_rope
+
+NEG_INF = -2.0 ** 30  # large-negative in fp32, safe under bf16 casts
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg, key, dtype) -> Tuple[Dict, Dict]:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim()
+    ks = jax.random.split(key, 4)
+    sc = float(1.0 / np.sqrt(d))
+    p = {
+        "wq": jax.random.normal(ks[0], (d, H * hd), dtype) * sc,
+        "wk": jax.random.normal(ks[1], (d, KV * hd), dtype) * sc,
+        "wv": jax.random.normal(ks[2], (d, KV * hd), dtype) * sc,
+        "wo": jax.random.normal(ks[3], (H * hd, d), dtype) * float(1.0 / np.sqrt(H * hd)),
+    }
+    s = {"wq": ("embed", "heads"), "wk": ("embed", "kv"),
+         "wv": ("embed", "kv"), "wo": ("heads", "embed")}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+        s["bq"], s["bk"], s["bv"] = ("heads",), ("kv",), ("kv",)
+    return p, s
+
+
+def _project_qkv(p, cfg, x, positions):
+    b, s, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim()
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, H, hd)
+    k = k.reshape(b, s, KV, hd)
+    v = v.reshape(b, s, KV, hd)
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rotary_pct)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rotary_pct)
+    return q, k, v
+
+
+def _mha_core(cfg, q, k, v, q_pos, k_pos, window: Optional[int],
+              k_valid: Optional[jax.Array] = None) -> jax.Array:
+    """q [b,s,H,hd] · k,v [b,t,KV,hd] with causal(+window) position masking.
+
+    fp32 scores/softmax; GQA via head grouping (no kv repeat materialized).
+    """
+    b, s, H, hd = q.shape
+    t = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    scale = cfg.query_scale if cfg.query_scale else 1.0 / np.sqrt(hd)
+    qg = q.reshape(b, s, KV, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if cfg.attn_softcap:
+        c = cfg.attn_softcap
+        scores = c * jnp.tanh(scores / c)
+    causal = k_pos[:, None, :] <= q_pos[:, :, None]              # [b,s,t]
+    if window is not None:
+        causal &= (q_pos[:, :, None] - k_pos[:, None, :]) < window
+    if k_valid is not None:
+        causal &= k_valid[:, None, :]
+    scores = jnp.where(causal[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(v.dtype), v)
+    return out.reshape(b, s, H, hd)
+
+
+def _mha_chunked(cfg, q, k, v, q_pos, k_pos, window: Optional[int],
+                 block: int) -> jax.Array:
+    """Trace-time flash attention (the XLA build of kernels/flash_attention).
+
+    Static python loops over (q-block × k-block) tiles with online softmax:
+    only [bq × bk] fp32 tiles ever materialize (vs the naive [s × s]
+    scores), and tiles that are entirely above the causal diagonal or
+    outside the sliding-window band are skipped AT TRACE TIME — so SWA
+    layers get their true O(s·w) compute instead of O(s²), and causal
+    attention drops the upper-triangle half. Assumes row-major positions
+    (q_pos/k_pos are arange), which attend_full guarantees.
+    """
+    b, s, H, hd = q.shape
+    t = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    bq = min(block, s)
+    bk = min(block, t)
+    if s % bq or t % bk:
+        return _mha_core(cfg, q, k, v, q_pos, k_pos, window)
+    nq, nk = s // bq, t // bk
+    scale = cfg.query_scale if cfg.query_scale else 1.0 / np.sqrt(hd)
+
+    out_blocks = []
+    for iq in range(nq):
+        sl = slice(iq * bq, (iq + 1) * bq)
+        qg = q[:, sl].reshape(b, bq, KV, G, hd)
+        qp = q_pos[:, sl]
+        m = jnp.full((b, KV, G, bq), NEG_INF, jnp.float32)
+        l = jnp.zeros((b, KV, G, bq), jnp.float32)
+        acc = jnp.zeros((b, KV, G, bq, hd), jnp.float32)
+        for ik in range(nk):
+            k_start, k_end = ik * bk, (ik + 1) * bk
+            q_start, q_end = iq * bq, (iq + 1) * bq
+            if k_start > q_end - 1:
+                continue                      # fully above the diagonal
+            if window is not None and (q_start - (k_end - 1)) >= window:
+                continue                      # fully outside the SWA band
+            kb = k[:, k_start:k_end]
+            vb = v[:, k_start:k_end]
+            kp = k_pos[:, k_start:k_end]
+            sc = jnp.einsum("bqkgh,btkh->bkgqt", qg, kb,
+                            preferred_element_type=jnp.float32) * scale
+            if cfg.attn_softcap:
+                c = cfg.attn_softcap
+                sc = c * jnp.tanh(sc / c)
+            mask = kp[:, None, :] <= qp[:, :, None]
+            if window is not None:
+                mask &= (qp[:, :, None] - kp[:, None, :]) < window
+            mask = mask[:, None, None, :, :]   # [b,1,1,bq,bk]
+            sc_masked = jnp.where(mask, sc, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(sc_masked, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            pprob = jnp.where(mask, jnp.exp(sc - m_new[..., None]), 0.0)
+            l = l * alpha + jnp.sum(pprob, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqt,btkh->bkgqh", pprob.astype(v.dtype), vb
+            ).astype(jnp.float32)
+            m = m_new
+        safe_l = jnp.where(l > 0, l, 1.0)
+        ob = (acc / safe_l[..., None]).astype(q.dtype)  # [b,KV,G,bq,hd]
+        out_blocks.append(ob.transpose(0, 3, 1, 2, 4).reshape(b, bq, H, hd))
+    return jnp.concatenate(out_blocks, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence (train / prefill)
+# ---------------------------------------------------------------------------
+
+def attend_full(p: Dict, cfg, spec, x: jax.Array, positions: jax.Array,
+                make_cache: Optional[int] = None
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x [b,s,d] → (y [b,s,d], cache or None).
+
+    ``make_cache``: capacity of the decode cache to emit (≥ s for full
+    attention; == window for SWA layers)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    if cfg.attn_impl == "chunked":
+        y = _mha_chunked(cfg, q, k, v, positions, positions, spec.window,
+                         cfg.attn_block)
+    else:
+        y = _mha_core(cfg, q, k, v, positions, positions, spec.window)
+    y = jnp.einsum("bsh,he->bse", y.reshape(b, s, -1), p["wo"])
+    cache = None
+    if make_cache is not None:
+        cache = init_kv_cache(b, make_cache, cfg.n_kv_heads,
+                              cfg.resolved_head_dim(), k.dtype)
+        cache = cache_append(cache, k, v, positions)
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# KV cache (ring buffer with per-slot absolute positions)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(b: int, capacity: int, kv_heads: int, head_dim: int,
+                  dtype) -> Dict[str, jax.Array]:
+    return {
+        "k": jnp.zeros((b, capacity, kv_heads, head_dim), dtype),
+        "v": jnp.zeros((b, capacity, kv_heads, head_dim), dtype),
+        "pos": jnp.full((b, capacity), -1, jnp.int32),
+        "idx": jnp.zeros((), jnp.int32),   # total tokens ever written
+    }
+
+
+def cache_append(cache: Dict, k: jax.Array, v: jax.Array,
+                 positions: jax.Array) -> Dict:
+    """Append s tokens (prefill bulk write or single decode step)."""
+    C = cache["k"].shape[1]
+    s = k.shape[1]
+    slots = (cache["idx"] + jnp.arange(s, dtype=jnp.int32)) % C
+    k_new = cache["k"].at[:, slots].set(k)
+    v_new = cache["v"].at[:, slots].set(v)
+    pos_new = cache["pos"].at[:, slots].set(positions.astype(jnp.int32))
+    return {"k": k_new, "v": v_new, "pos": pos_new,
+            "idx": cache["idx"] + s}
+
+
+def attend_decode(p: Dict, cfg, spec, x: jax.Array, positions: jax.Array,
+                  cache: Dict) -> Tuple[jax.Array, Dict]:
+    """One-token step: x [b,1,d], cache holds the history."""
+    b = x.shape[0]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    cache = cache_append(cache, k, v, positions)
+    k_valid = cache["pos"] >= 0
+    y = _mha_core(cfg, q, cache["k"], cache["v"], positions, cache["pos"],
+                  spec.window, k_valid=k_valid)
+    y = jnp.einsum("bsh,he->bse", y.reshape(b, 1, -1), p["wo"])
+    return y, cache

@@ -1,0 +1,172 @@
+"""Shared neural layers: norms, MLPs, embeddings, softcaps, positions.
+
+Everything is a plain function over pytrees (no framework): ``init_*``
+builds (params, pspec) pairs where ``pspec`` mirrors the param tree with
+*logical axis names* per dimension — the distribution layer
+(repro.dist.shardings) maps logical names → mesh axes with divisibility
+fallbacks. Compute dtype is the config dtype (bf16); accumulations that
+matter (logits, softmax, norms) run in fp32.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hints import hint
+
+# Logical axis vocabulary (see repro/dist/shardings.py for the rule table):
+#   "vocab"   embedding-table rows            → model axis
+#   "embed"   model width                     → data axis (FSDP dim)
+#   "mlp"     feed-forward hidden             → model axis
+#   "heads"   q-head (or flattened head·dim)  → model axis
+#   "kv"      kv-head dimension               → model if divisible
+#   "expert"  MoE expert dimension            → model if divisible
+#   "lora"    MLA latent dims                 → replicated
+#   None      replicated
+
+
+def shape_of(params: Any) -> Any:
+    return jax.tree_util.tree_map(lambda x: x.shape, params)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg, d: int) -> Tuple[Dict, Dict]:
+    if cfg.norm == "rms":
+        return ({"scale": jnp.ones((d,), jnp.float32)},
+                {"scale": ("embed",)})
+    return ({"scale": jnp.ones((d,), jnp.float32),
+             "bias": jnp.zeros((d,), jnp.float32)},
+            {"scale": ("embed",), "bias": ("embed",)})
+
+
+def apply_norm(p: Dict, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    """Statistics in fp32; the wide elementwise path stays in the compute
+    dtype. Keeping the [b, s, d]-shaped values (and hence their
+    cotangents) in bf16 is what keeps the TP activation-grad psums in bf16
+    — with a fully-fp32 norm, GSPMD all-reduced fp32 dx partials (observed
+    2× collective bytes on the mixtral train_4k probe)."""
+    xf = x.astype(jnp.float32)
+    if kind == "rms":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+        return x * inv * p["scale"].astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return ((x - mu.astype(x.dtype)) * inv * p["scale"].astype(x.dtype)
+            + p["bias"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense)
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg, key, d: int, d_ff: int, dtype) -> Tuple[Dict, Dict]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = float(1.0 / np.sqrt(d))
+    scale_out = float(1.0 / np.sqrt(d_ff))
+    gated = cfg.act in ("swiglu", "geglu")
+    p = {"wi": jax.random.normal(k1, (d, d_ff), dtype) * scale_in,
+         "wo": jax.random.normal(k3, (d_ff, d), dtype) * scale_out}
+    s = {"wi": ("embed", "mlp"), "wo": ("mlp", "embed")}
+    if gated:
+        p["wg"] = jax.random.normal(k2, (d, d_ff), dtype) * scale_in
+        s["wg"] = ("embed", "mlp")
+    return p, s
+
+
+def apply_mlp(p: Dict, x: jax.Array, act: str) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["wi"])
+    if act in ("swiglu", "geglu"):
+        g = jnp.einsum("...d,df->...f", x, p["wg"])
+        gate = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        h = gate * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def init_embedding(cfg, key, dtype) -> Tuple[Dict, Dict]:
+    k1, k2 = jax.random.split(key)
+    p = {"tok": jax.random.normal(k1, (cfg.vocab, cfg.d_model), dtype) * 0.02}
+    s = {"tok": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        p["head"] = jax.random.normal(k2, (cfg.d_model, cfg.vocab), dtype) * 0.02
+        s["head"] = ("embed", "vocab")
+    return p, s
+
+
+def embed_tokens(p: Dict, cfg, tokens: jax.Array) -> jax.Array:
+    x = p["tok"][tokens]
+    if cfg.scale_embed:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def lm_logits(p: Dict, cfg, x: jax.Array) -> jax.Array:
+    w = p["tok"].T if cfg.tie_embeddings else p["head"]
+    x = hint(x, ("batch",) + (None,) * (x.ndim - 1))
+    logits = jnp.einsum("...d,dv->...v", x, w,
+                        preferred_element_type=jnp.float32)
+    logits = hint(logits, ("batch",) + (None,) * (x.ndim - 2) + ("vocab",))
+    if cfg.final_softcap:
+        c = cfg.final_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Positions (non-rope)
+# ---------------------------------------------------------------------------
+
+def sinusoidal_positions(positions: jax.Array, d: int,
+                         dtype=jnp.float32) -> jax.Array:
+    """[.., s] int positions → [.., s, d] sinusoidal embeddings."""
+    half = d // 2
+    freqs = np.exp(-np.log(10_000.0) * np.arange(half) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token cross-entropy in fp32. logits [..., v], labels [...].
+
+    Sharding-friendly on a vocab-partitioned logits tensor: the gold-logit
+    extraction is an iota-compare-select fused into a reduction (partial
+    sum + small all-reduce), NOT take_along_axis — a vocab gather would
+    force GSPMD to all-gather the full [b, s, vocab] logits (tens of GB at
+    train_4k shapes; observed before this fix as a 74 GB/step all-gather
+    and a 126 GB/device temp in the dry-run)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vpos = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                    logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vpos == labels[..., None], logits, 0.0),
+                   axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

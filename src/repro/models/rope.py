@@ -1,0 +1,32 @@
+"""Rotary position embeddings, with partial-rotary support (stablelm)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rope_frequencies(head_dim: int, theta: float, rotary_pct: float = 1.0):
+    rot = int(head_dim * rotary_pct)
+    rot -= rot % 2
+    inv = 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float64) / rot))
+    return rot, jnp.asarray(inv, jnp.float32)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               rotary_pct: float = 1.0) -> jax.Array:
+    """x: [b, s, h, hd]; positions: [b, s] (absolute)."""
+    hd = x.shape[-1]
+    rot, inv = rope_frequencies(hd, theta, rotary_pct)
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    ang = positions[..., None].astype(jnp.float32) * inv      # [b, s, rot/2]
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([rotated, xp], axis=-1) if rot < hd else rotated

@@ -1,0 +1,229 @@
+"""Mamba-2 SSD (state-space duality) block — chunked parallel form.
+
+TPU adaptation (see DESIGN.md): the SSD algorithm is already the right
+shape for the MXU — within-chunk computation is batched matmuls over
+[chunk × chunk] and [chunk × d_state] tiles (chunk=256 keeps everything in
+128-multiples), and the cross-chunk recurrence is a tiny ``lax.scan`` over
+per-chunk decays/states. No warp-level primitives are needed; the GPU
+implementation's shared-memory staging maps to VMEM tiles chosen by XLA
+(and by our BlockSpecs if the Pallas path is enabled).
+
+Decode is the O(1) recurrent step: conv-buffer shift + state update
+``h ← exp(dt·a)·h + dt·B⊗x`` — constant memory in sequence length, which
+is exactly why mamba2/jamba run the ``long_500k`` cell (DESIGN.md
+§Arch-applicability).
+
+Jamba note: Jamba's Mamba-1 (S6) layers are mapped onto this SSD block
+(scalar-per-head A instead of per-channel); a faithful-in-spirit TPU
+adaptation, recorded in DESIGN.md §changed-assumptions.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import apply_norm
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, nh, conv_dim
+
+
+def init_ssm(cfg, key, dtype) -> Tuple[Dict, Dict]:
+    s, d_in, nh, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    sc = float(1.0 / np.sqrt(d))
+    # Separate z / xBC / dt projections (not one fused [d, d_in+conv+nh]
+    # matrix): the fused width (e.g. mamba2's 3352) is rarely divisible by
+    # the model axis, which forced full replication; split, z (1536) and
+    # xBC (1792) shard cleanly and only the tiny dt head replicates.
+    p = {
+        "w_z": jax.random.normal(ks[0], (d, d_in), dtype) * sc,
+        "w_xbc": jax.random.normal(ks[3], (d, conv_dim), dtype) * sc,
+        "w_dt": jax.random.normal(ks[4], (d, nh), dtype) * sc,
+        "conv_w": jax.random.normal(ks[1], (s.d_conv, conv_dim), dtype) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": {"scale": jnp.ones((d_in,), jnp.float32)},
+        "w_out": jax.random.normal(ks[2], (d_in, d), dtype) * float(1.0 / np.sqrt(d_in)),
+    }
+    spec = {
+        "w_z": ("embed", "mlp"), "w_xbc": ("embed", "mlp"),
+        "w_dt": ("embed", None), "conv_w": (None, "mlp"),
+        "conv_b": ("mlp",), "A_log": (None,), "D": (None,),
+        "dt_bias": (None,), "norm": {"scale": ("mlp",)},
+        "w_out": ("mlp", "embed"),
+    }
+    return p, spec
+
+
+def _split_proj(p, cfg, x):
+    z = jnp.einsum("bsd,dk->bsk", x, p["w_z"])
+    xBC = jnp.einsum("bsd,dk->bsk", x, p["w_xbc"])
+    dt = jnp.einsum("bsd,dk->bsk", x, p["w_dt"])
+    return z, xBC, dt
+
+
+def _causal_conv_full(p, xBC):
+    """[b, s, conv_dim] depthwise causal conv, kernel k."""
+    k = p["conv_w"].shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * p["conv_w"][i]
+              for i in range(k))
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def _segsum(log_a):
+    """[..., Q] per-step log-decays → [..., Q, Q] lower-tri cumulative sums:
+    out[i,j] = Σ_{j<k≤i} log_a[k] for i ≥ j, -inf otherwise."""
+    Q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # Σ(j..i]
+    i = jnp.arange(Q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssm_full(p: Dict, cfg, x: jax.Array,
+             make_cache: bool = False) -> Tuple[jax.Array, Optional[Dict]]:
+    """Chunked SSD over the full sequence. x [b, s_len, d]."""
+    s, d_in, nh, conv_dim = _dims(cfg)
+    b, slen, _ = x.shape
+    g, n, hd = s.n_groups, s.d_state, s.head_dim
+    hpg = nh // g
+
+    z, xBC, dt = _split_proj(p, cfg, x)
+    xBC = _causal_conv_full(p, xBC)
+    xs = xBC[..., :d_in].reshape(b, slen, nh, hd)
+    B = xBC[..., d_in:d_in + g * n].reshape(b, slen, g, n)
+    C = xBC[..., d_in + g * n:].reshape(b, slen, g, n)
+
+    a = -jnp.exp(p["A_log"])                                    # [nh]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [b,s,nh]
+    log_decay = dt * a                                           # [b,s,nh]
+
+    Q = min(s.chunk, slen)
+    assert slen % Q == 0, (slen, Q)
+    nc = slen // Q
+
+    def rs(t, extra):  # [b, s, ...] -> [b, nc, Q, ...]
+        return t.reshape((b, nc, Q) + extra)
+
+    xs_c = rs(xs, (nh, hd))
+    B_c = rs(B, (g, n))
+    C_c = rs(C, (g, n))
+    dt_c = rs(dt, (nh,))
+    ld_c = rs(log_decay, (nh,)).transpose(0, 1, 3, 2)            # [b,nc,nh,Q]
+
+    # within-chunk ("diagonal") term: masked quadratic attention-like matmul
+    L = jnp.exp(_segsum(ld_c))                                   # [b,nc,nh,Q,Q]
+    # scores[b,c,h,i,j] = (C_i · B_j) L[h,i,j] dt_j
+    CB = jnp.einsum("bcign,bcjgn->bcgij", C_c, B_c,
+                    preferred_element_type=jnp.float32)          # [b,nc,g,Q,Q]
+    CB = jnp.repeat(CB, hpg, axis=2)                             # [b,nc,nh,Q,Q]
+    W = CB * L * dt_c.transpose(0, 1, 3, 2)[..., None, :]        # dt_j
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", W.astype(xs_c.dtype), xs_c)
+
+    # per-chunk summary state: S_c = Σ_j exp(Σ_{k>j} ld) dt_j B_j ⊗ x_j
+    cum = jnp.cumsum(ld_c, axis=-1)
+    tail = jnp.exp(cum[..., -1:] - cum)                          # [b,nc,nh,Q]
+    wj = (tail * dt_c.transpose(0, 1, 3, 2)).astype(xs_c.dtype)  # [b,nc,nh,Q]
+    Bh = jnp.repeat(B_c, hpg, axis=3)                            # [b,nc,Q,nh,n]
+    S = jnp.einsum("bchj,bcjhn,bcjhp->bchpn", wj, Bh, xs_c)      # [b,nc,nh,hd,n]
+
+    # cross-chunk recurrence (tiny scan over nc)
+    chunk_decay = jnp.exp(cum[..., -1])                          # [b,nc,nh]
+
+    def step(h, inputs):
+        dec, Sc = inputs
+        h_new = h * dec[..., None, None] + Sc
+        return h_new, h                                          # emit state BEFORE chunk
+
+    h0 = jnp.zeros((b, nh, hd, n), jnp.float32)
+    _, h_prev = jax.lax.scan(
+        step, h0, (chunk_decay.transpose(1, 0, 2), S.transpose(1, 0, 2, 3, 4).astype(jnp.float32)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                     # [b,nc,nh,hd,n]
+
+    # off-chunk contribution: y_off[i] = exp(cum[i]) C_i · h_prev
+    Ch = jnp.repeat(C_c, hpg, axis=3)                            # [b,nc,Q,nh,n]
+    y_off = jnp.einsum("bcihn,bchpn->bcihp", Ch.astype(jnp.float32),
+                       h_prev) * jnp.exp(cum).transpose(0, 1, 3, 2)[..., None]
+
+    y = (y_diag.astype(jnp.float32) + y_off).reshape(b, slen, nh, hd)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, slen, d_in).astype(x.dtype)
+
+    y = apply_norm(p["norm"], y * jax.nn.silu(z), "rms")
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"])
+
+    cache = None
+    if make_cache:
+        # final recurrent state + conv tail for decode continuation
+        h_last, _ = jax.lax.scan(
+            step, h0, (chunk_decay.transpose(1, 0, 2),
+                       S.transpose(1, 0, 2, 3, 4).astype(jnp.float32)))
+        _, xBC_raw, _ = _split_proj(p, cfg, x)
+        k = p["conv_w"].shape[0]
+        tail_in = xBC_raw[:, -(k - 1):, :]
+        cache = {"ssm": h_last, "conv": tail_in,
+                 "idx": jnp.asarray(slen, jnp.int32)}
+    return out, cache
+
+
+def init_ssm_cache(cfg, b: int, dtype) -> Dict[str, jax.Array]:
+    s, d_in, nh, conv_dim = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((b, nh, s.head_dim, s.d_state), jnp.float32),
+        "conv": jnp.zeros((b, s.d_conv - 1, conv_dim), dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def ssm_decode(p: Dict, cfg, x: jax.Array,
+               cache: Dict) -> Tuple[jax.Array, Dict]:
+    """O(1) recurrent step. x [b, 1, d]."""
+    s, d_in, nh, conv_dim = _dims(cfg)
+    b = x.shape[0]
+    g, n, hd = s.n_groups, s.d_state, s.head_dim
+    hpg = nh // g
+
+    z, xBC, dt = _split_proj(p, cfg, x)                 # [b,1,·]
+    # conv over (cached k-1 inputs ++ current)
+    window = jnp.concatenate([cache["conv"], xBC], axis=1)   # [b,k,conv_dim]
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xBC_t = jax.nn.silu(conv_out)                            # [b,conv_dim]
+
+    xs = xBC_t[:, :d_in].reshape(b, nh, hd)
+    B = xBC_t[:, d_in:d_in + g * n].reshape(b, g, n)
+    C = xBC_t[:, d_in + g * n:].reshape(b, g, n)
+    Bh = jnp.repeat(B, hpg, axis=1)                          # [b,nh,n]
+    Ch = jnp.repeat(C, hpg, axis=1)
+
+    a = -jnp.exp(p["A_log"])
+    dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [b,nh]
+    decay = jnp.exp(dt_t * a)                                # [b,nh]
+
+    h = cache["ssm"] * decay[..., None, None] + \
+        (dt_t[..., None, None] * Bh[:, :, None, :].astype(jnp.float32)
+         * xs[..., None].astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", h, Ch.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+
+    y = apply_norm(p["norm"], y * jax.nn.silu(z), "rms")
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"])
+    new_cache = {"ssm": h,
+                 "conv": window[:, 1:, :],
+                 "idx": cache["idx"] + 1}
+    return out, new_cache

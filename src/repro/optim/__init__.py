@@ -1,0 +1,10 @@
+"""Optimizer substrate: AdamW with fp32 master weights, global-norm
+clipping, warmup+cosine schedule. Pure pytree functions — sharding comes
+from the distribution layer's PartitionSpecs (optimizer state mirrors the
+parameter sharding, ZeRO-style)."""
+
+from .adamw import (AdamWConfig, adamw_update, init_opt_state,
+                    lr_at_step, opt_state_pspecs)
+
+__all__ = ["AdamWConfig", "adamw_update", "init_opt_state", "lr_at_step",
+           "opt_state_pspecs"]

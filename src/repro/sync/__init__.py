@@ -1,0 +1,29 @@
+"""Cross-pod δ-CRDT synchronization runtime.
+
+Tier-1 of the framework's two-tier distribution story (DESIGN.md §2):
+inside a pod, synchronous SPMD collectives; across pods — where links are
+slow, lossy, partition-prone and membership is elastic — replication is
+δ-CRDT anti-entropy:
+
+* ``localsgd``      — DiLoCo-style cross-pod training: pods run K local
+                      steps, contribute uniquely-dotted pseudo-gradient
+                      deltas to a ``DotSumStore`` lattice, gossiped with
+                      Algorithm 2; the §7.2-compressed ``IntervalSum``
+                      variant keeps O(1) memory.
+* ``compression``   — top-k magnitude sparsification with error feedback
+                      (the delta payloads for dense models).
+* ``membership``    — elastic worker membership: AWORSet of workers +
+                      monotone heartbeats; straggler detection/eviction.
+* ``metrics``       — duplicate-safe distributed metrics (per-replica
+                      monotone entries; PN counters).
+"""
+
+from .compression import TopKCompressor, sparse_nbytes
+from .localsgd import DeltaSyncPod, OuterParams
+from .membership import ClusterState, Membership
+from .metrics import Metrics, MetricsState
+
+__all__ = [
+    "TopKCompressor", "sparse_nbytes", "DeltaSyncPod", "OuterParams",
+    "ClusterState", "Membership", "Metrics", "MetricsState",
+]

@@ -1,0 +1,90 @@
+"""Gradient/delta compression for cross-pod shipping.
+
+Dense models touch every parameter every step, so chunk-version deltas
+degenerate to full state per round (DESIGN.md §4). The practical payload
+reducer is magnitude top-k sparsification with **error feedback**: the
+un-shipped residual is accumulated locally and added to the next round's
+delta, so the compression error is a delay, not a loss — exactly the
+delta-friendly shape: each shipped sparse update is a uniquely-dotted
+contribution to the ``DotSumStore`` lattice, still idempotent under
+re-delivery.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _topk_sparsify(x: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Indices and values of the k largest-|·| entries of flattened x."""
+    flat = x.reshape(-1)
+    k = max(1, min(int(k), flat.shape[0]))
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return idx, flat[idx]
+
+
+_topk_sparsify_jit = jax.jit(_topk_sparsify, static_argnums=1)
+
+
+class TopKCompressor:
+    """Per-leaf top-k with error feedback.
+
+    ``compress`` returns a sparse pytree-of-(idx, vals, shape) and keeps the
+    residual; ``decompress`` densifies. Rate is the kept fraction.
+    """
+
+    def __init__(self, rate: float = 0.01):
+        assert 0.0 < rate <= 1.0
+        self.rate = rate
+        self.residual: Optional[Any] = None
+
+    def compress(self, update: Any) -> Any:
+        if self.residual is None:
+            self.residual = jax.tree_util.tree_map(jnp.zeros_like, update)
+        carried = jax.tree_util.tree_map(lambda u, r: u + r,
+                                         update, self.residual)
+
+        def one(x):
+            n = int(np.prod(x.shape))
+            k = max(1, int(round(self.rate * n)))
+            idx, vals = _topk_sparsify_jit(x, k)
+            return {"idx": idx, "vals": vals, "shape": x.shape}
+
+        sparse = jax.tree_util.tree_map(one, carried)
+
+        def leftover(x, s):
+            flat = x.reshape(-1)
+            return flat.at[s["idx"]].set(0.0).reshape(x.shape)
+
+        self.residual = jax.tree_util.tree_map(
+            leftover, carried, sparse,
+            is_leaf=lambda t: isinstance(t, jnp.ndarray))
+        return sparse
+
+    @staticmethod
+    def decompress(sparse: Any) -> Any:
+        def one(s):
+            flat = jnp.zeros(int(np.prod(s["shape"])),
+                             dtype=s["vals"].dtype)
+            return flat.at[s["idx"]].set(s["vals"]).reshape(s["shape"])
+
+        return jax.tree_util.tree_map(
+            one, sparse, is_leaf=lambda t: isinstance(t, dict) and "idx" in t)
+
+
+def sparse_nbytes(sparse: Any) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+            sparse, is_leaf=lambda t: isinstance(t, dict) and "idx" in t):
+        total += int(leaf["idx"].size) * 4 + int(leaf["vals"].size) * \
+            leaf["vals"].dtype.itemsize
+    return total
+
+
+def dense_nbytes(tree: Any) -> int:
+    return sum(int(x.size) * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,127 @@
+"""Elastic cluster membership + straggler mitigation, as δ-CRDTs.
+
+The live-worker set is an **add-wins OR-Set** (paper §7): a pod that
+rejoins after a partition wins over a stale eviction — exactly the add-wins
+conflict policy wanted for elasticity. Heartbeats are per-worker monotone
+LWW entries. Both pieces form a product lattice, so the whole cluster view
+gossips through the same anti-entropy machinery as everything else, over
+lossy links, with no coordinator.
+
+Straggler policy: a worker whose heartbeat lags ``timeout`` behind the
+observer's clock is a straggler; after ``evict_after`` it is removed from
+the membership set (an observed-remove — concurrent rejoin wins). The
+local-SGD layer simply stops waiting for contributions from workers outside
+the live set (bounded-staleness barrier), which is the δ-CRDT version of
+backup-worker straggler mitigation: progress never blocks on a slow pod,
+and a late pod's dots still merge idempotently when they eventually arrive.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, Optional, Tuple
+
+from ..core.crdts import AWORSet, DeltaCRDT, LWWSet
+from ..core.dots import ReplicaId
+
+
+@dataclass(frozen=True)
+class HeartbeatMap(DeltaCRDT):
+    """worker → monotone max timestamp (grow-only pointwise-max map)."""
+
+    entries: Tuple[Tuple[ReplicaId, float], ...] = ()
+
+    @staticmethod
+    def bottom() -> "HeartbeatMap":
+        return HeartbeatMap()
+
+    def beat_delta(self, worker: ReplicaId, ts: float) -> "HeartbeatMap":
+        return HeartbeatMap(((worker, ts),))
+
+    def beat_full(self, worker: ReplicaId, ts: float) -> "HeartbeatMap":
+        return self.join(self.beat_delta(worker, ts))
+
+    def last_seen(self, worker: ReplicaId) -> float:
+        return dict(self.entries).get(worker, float("-inf"))
+
+    def join(self, other: "HeartbeatMap") -> "HeartbeatMap":
+        m = dict(self.entries)
+        for w, ts in other.entries:
+            m[w] = max(m.get(w, float("-inf")), ts)
+        return HeartbeatMap(tuple(sorted(m.items())))
+
+
+@dataclass(frozen=True)
+class ClusterState(DeltaCRDT):
+    """Product lattice: membership OR-Set × heartbeat map."""
+
+    members: AWORSet = AWORSet()
+    heartbeats: HeartbeatMap = HeartbeatMap()
+
+    @staticmethod
+    def bottom() -> "ClusterState":
+        return ClusterState()
+
+    def join(self, other: "ClusterState") -> "ClusterState":
+        return ClusterState(self.members.join(other.members),
+                            self.heartbeats.join(other.heartbeats))
+
+    # -- delta-mutators --------------------------------------------------------
+    def join_delta(self, i: ReplicaId, worker: ReplicaId,
+                   ts: float) -> "ClusterState":
+        return ClusterState(self.members.add_delta(i, worker),
+                            self.heartbeats.beat_delta(worker, ts))
+
+    def leave_delta(self, i: ReplicaId, worker: ReplicaId) -> "ClusterState":
+        return ClusterState(self.members.rmv_delta(i, worker),
+                            HeartbeatMap.bottom())
+
+    def beat_delta(self, worker: ReplicaId, ts: float) -> "ClusterState":
+        return ClusterState(AWORSet.bottom(),
+                            self.heartbeats.beat_delta(worker, ts))
+
+    # -- queries -------------------------------------------------------------
+    def workers(self) -> FrozenSet[ReplicaId]:
+        return self.members.elements()
+
+    def alive(self, now: float, timeout: float) -> FrozenSet[ReplicaId]:
+        return frozenset(w for w in self.workers()
+                         if now - self.heartbeats.last_seen(w) <= timeout)
+
+    def stragglers(self, now: float, timeout: float) -> FrozenSet[ReplicaId]:
+        return self.workers() - self.alive(now, timeout)
+
+
+class Membership:
+    """Local membership agent for one pod: wraps delta-mutations so the
+    surrounding anti-entropy node (Basic/Causal) can gossip them."""
+
+    def __init__(self, self_id: ReplicaId, timeout: float = 30.0,
+                 evict_after: float = 90.0):
+        self.self_id = self_id
+        self.timeout = timeout
+        self.evict_after = evict_after
+
+    def announce(self, state: ClusterState, now: float) -> ClusterState:
+        return state.join_delta(self.self_id, self.self_id, now)
+
+    def heartbeat(self, state: ClusterState, now: float) -> ClusterState:
+        return state.beat_delta(self.self_id, now)
+
+    def evictions(self, state: ClusterState, now: float) -> ClusterState:
+        """Delta that removes every worker silent for ≥ evict_after."""
+        delta = ClusterState.bottom()
+        for w in state.workers():
+            if w == self.self_id:
+                continue
+            if now - state.heartbeats.last_seen(w) >= self.evict_after:
+                delta = delta.join(state.leave_delta(self.self_id, w))
+        return delta
+
+    def quorum(self, state: ClusterState, now: float,
+               fraction: float = 0.5) -> FrozenSet[ReplicaId]:
+        """The bounded-staleness barrier set: contributions awaited only
+        from currently-alive workers (straggler mitigation)."""
+        alive = state.alive(now, self.timeout)
+        need = max(1, int(len(state.workers()) * fraction))
+        return alive if len(alive) >= need else frozenset()

@@ -1,0 +1,187 @@
+"""Uniform op adapters over every δ-CRDT datatype, for property tests.
+
+Each adapter exposes the datatype's bottom and a list of operations; every
+operation carries BOTH forms required by the decomposition law of §4.1:
+
+* ``delta(state, replica, *args)`` — the δ-mutator ``mᵟ`` (returns a delta),
+* ``full(state, replica, *args)``  — the standard CRDT mutator ``m``
+  (returns the full successor state),
+
+so tests can check ``full(X) == X.join(delta(X))`` and drive random
+executions that exercise concurrency (divergent replicas + random joins).
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Tuple
+
+from repro.core import (AWORSet, AWORSetTombstone, DWFlag, EWFlag, GCounter,
+                        GSet, LWWRegister, LWWSet, MVRegister, ORMap,
+                        PNCounter, RWORSet, TwoPSet)
+
+ELEMS = ["a", "b", "c", "d"]
+KEYS = ["k1", "k2"]
+REPLICAS = ["r0", "r1", "r2"]
+
+
+@dataclass
+class OpSpec:
+    name: str
+    make_args: Callable[[random.Random], tuple]
+    delta: Callable[..., Any]
+    full: Callable[..., Any]
+
+
+@dataclass
+class Adapter:
+    name: str
+    bottom: Any
+    ops: List[OpSpec]
+
+
+def _elem(rng: random.Random) -> tuple:
+    return (rng.choice(ELEMS),)
+
+
+def _ts_elem(rng: random.Random) -> tuple:
+    return (rng.randint(1, 40), rng.choice(ELEMS))
+
+
+ADAPTERS: Dict[str, Adapter] = {}
+
+
+def _register(adapter: Adapter) -> None:
+    ADAPTERS[adapter.name] = adapter
+
+
+_register(Adapter(
+    "gcounter", GCounter.bottom(),
+    [OpSpec("inc", lambda rng: (rng.randint(1, 3),),
+            lambda X, i, by: X.inc_delta(i, by),
+            lambda X, i, by: X.inc_full(i, by))]))
+
+_register(Adapter(
+    "pncounter", PNCounter.bottom(),
+    [OpSpec("inc", lambda rng: (rng.randint(1, 3),),
+            lambda X, i, by: X.inc_delta(i, by),
+            lambda X, i, by: X.inc_full(i, by)),
+     OpSpec("dec", lambda rng: (rng.randint(1, 3),),
+            lambda X, i, by: X.dec_delta(i, by),
+            lambda X, i, by: X.dec_full(i, by))]))
+
+_register(Adapter(
+    "gset", GSet.bottom(),
+    [OpSpec("add", _elem,
+            lambda X, i, e: X.add_delta(e),
+            lambda X, i, e: X.add_full(e))]))
+
+_register(Adapter(
+    "2pset", TwoPSet.bottom(),
+    [OpSpec("add", _elem,
+            lambda X, i, e: X.add_delta(e),
+            lambda X, i, e: X.add_full(e)),
+     OpSpec("rmv", _elem,
+            lambda X, i, e: X.rmv_delta(e),
+            lambda X, i, e: X.rmv_full(e))]))
+
+_register(Adapter(
+    "aworset_tomb", AWORSetTombstone.bottom(),
+    [OpSpec("add", _elem,
+            lambda X, i, e: X.add_delta(i, e),
+            lambda X, i, e: X.add_full(i, e)),
+     OpSpec("rmv", _elem,
+            lambda X, i, e: X.rmv_delta(i, e),
+            lambda X, i, e: X.rmv_full(i, e))]))
+
+_register(Adapter(
+    "aworset", AWORSet.bottom(),
+    [OpSpec("add", _elem,
+            lambda X, i, e: X.add_delta(i, e),
+            lambda X, i, e: X.add_full(i, e)),
+     OpSpec("rmv", _elem,
+            lambda X, i, e: X.rmv_delta(i, e),
+            lambda X, i, e: X.rmv_full(i, e))]))
+
+_register(Adapter(
+    "rworset", RWORSet.bottom(),
+    [OpSpec("add", _elem,
+            lambda X, i, e: X.add_delta(i, e),
+            lambda X, i, e: X.add_full(i, e)),
+     OpSpec("rmv", _elem,
+            lambda X, i, e: X.rmv_delta(i, e),
+            lambda X, i, e: X.rmv_full(i, e))]))
+
+_register(Adapter(
+    "mvreg", MVRegister.bottom(),
+    [OpSpec("write", _elem,
+            lambda X, i, v: X.write_delta(i, v),
+            lambda X, i, v: X.write_full(i, v))]))
+
+_register(Adapter(
+    "lwwreg", LWWRegister.bottom(),
+    [OpSpec("write", _ts_elem,
+            lambda X, i, ts, v: X.write_delta(i, ts, v),
+            lambda X, i, ts, v: X.write_full(i, ts, v))]))
+
+_register(Adapter(
+    "lwwset", LWWSet.bottom(),
+    [OpSpec("add", _ts_elem,
+            lambda X, i, ts, e: X.add_delta(i, ts, e),
+            lambda X, i, ts, e: X.add_full(i, ts, e)),
+     OpSpec("rmv", _ts_elem,
+            lambda X, i, ts, e: X.rmv_delta(i, ts, e),
+            lambda X, i, ts, e: X.rmv_full(i, ts, e))]))
+
+_register(Adapter(
+    "ewflag", EWFlag.bottom(),
+    [OpSpec("enable", lambda rng: (),
+            lambda X, i: X.enable_delta(i),
+            lambda X, i: X.enable_full(i)),
+     OpSpec("disable", lambda rng: (),
+            lambda X, i: X.disable_delta(i),
+            lambda X, i: X.disable_full(i))]))
+
+_register(Adapter(
+    "dwflag", DWFlag.bottom(),
+    [OpSpec("enable", lambda rng: (),
+            lambda X, i: X.enable_delta(i),
+            lambda X, i: X.enable_full(i)),
+     OpSpec("disable", lambda rng: (),
+            lambda X, i: X.disable_delta(i),
+            lambda X, i: X.disable_full(i))]))
+
+_register(Adapter(
+    "ormap", ORMap.bottom(),
+    [OpSpec("set_add", lambda rng: (rng.choice(KEYS), rng.choice(ELEMS)),
+            lambda X, i, k, e: X.apply_delta(i, k, AWORSet, "add_delta", e),
+            lambda X, i, k, e: X.apply_full(i, k, AWORSet, "add_delta", e)),
+     OpSpec("set_rmv", lambda rng: (rng.choice(KEYS), rng.choice(ELEMS)),
+            lambda X, i, k, e: X.apply_delta(i, k, AWORSet, "rmv_delta", e),
+            lambda X, i, k, e: X.apply_full(i, k, AWORSet, "rmv_delta", e)),
+     OpSpec("key_rmv", lambda rng: (rng.choice(KEYS),),
+            lambda X, i, k: X.rmv_delta(i, k),
+            lambda X, i, k: X.rmv_full(i, k))]))
+
+
+def random_reachable_states(adapter: Adapter, rng: random.Random,
+                            n_ops: int = 12) -> List[Any]:
+    """Drive a multi-replica execution; return the per-replica states.
+
+    Each step either applies a delta-mutation at a random replica
+    (X' = X ⊔ mᵟ(X), Def. 3) or joins one replica's state into another
+    (full-state shipping), yielding realistic concurrent states.
+    """
+    states = {r: adapter.bottom for r in REPLICAS}
+    for _ in range(n_ops):
+        r = rng.choice(REPLICAS)
+        if rng.random() < 0.75:
+            op = rng.choice(adapter.ops)
+            args = op.make_args(rng)
+            d = op.delta(states[r], r, *args)
+            states[r] = states[r].join(d)
+        else:
+            src = rng.choice(REPLICAS)
+            states[r] = states[r].join(states[src])
+    return list(states.values())

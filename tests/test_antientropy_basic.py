@@ -1,0 +1,111 @@
+"""Algorithm 1 (basic anti-entropy): eventual convergence (Prop. 1) under
+the §2 network model — loss, duplication, reordering — in both transitive
+and direct modes, with the ship-full-state-every-k policy covering loss."""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from crdt_adapters import ADAPTERS, random_reachable_states
+from repro.core import (AWORSet, BasicNode, GCounter, NetConfig, Simulator,
+                        converged, run_to_convergence)
+
+
+def _mk_sim(n, loss=0.0, dup=0.0, seed=0, transitive=True,
+            ship_state_every=None, bottom=None, topology="full"):
+    sim = Simulator(NetConfig(loss=loss, dup=dup, seed=seed))
+    ids = [f"n{k}" for k in range(n)]
+    nodes = []
+    for k, i in enumerate(ids):
+        if topology == "full":
+            neigh = [j for j in ids if j != i]
+        elif topology == "ring":
+            neigh = [ids[(k + 1) % n], ids[(k - 1) % n]]
+        else:
+            raise ValueError(topology)
+        nodes.append(sim.add_node(BasicNode(
+            i, bottom, neigh, transitive=transitive,
+            ship_state_every=ship_state_every)))
+    return sim, nodes
+
+
+def test_counter_converges_reliable_network():
+    sim, nodes = _mk_sim(4, bottom=GCounter.bottom())
+    rng = random.Random(1)
+    for _ in range(30):
+        n = rng.choice(nodes)
+        n.operation(lambda X, i=n.id: X.inc_delta(i))
+    total = sum(n.X.value() for n in [nodes[0]]) if False else None
+    expected = sum(nx.X._get(nx.id) for nx in nodes)
+    run_to_convergence(sim, nodes, interval=1.0)
+    assert converged(nodes)
+    assert nodes[0].X.value() == 30 == expected + (30 - expected)
+
+
+@pytest.mark.parametrize("transitive", [True, False])
+def test_counter_converges_lossy_duplicating_network(transitive):
+    # Algorithm 1 clears D after send even when the message drops, so under
+    # loss convergence needs the periodic full-state fallback (paper §4:
+    # "subsumed by a less frequent sending of the full state").
+    sim, nodes = _mk_sim(4, loss=0.35, dup=0.2, seed=7,
+                         transitive=transitive, ship_state_every=5,
+                         bottom=GCounter.bottom())
+    rng = random.Random(2)
+    for _ in range(25):
+        n = rng.choice(nodes)
+        n.operation(lambda X, i=n.id: X.inc_delta(i))
+    run_to_convergence(sim, nodes, interval=1.0)
+    assert nodes[0].X.value() == 25
+
+
+def test_transitive_mode_propagates_through_ring():
+    """Direct mode on a ring cannot converge by deltas alone (no full-state
+    shipping, no transitivity) — transitive mode must."""
+    sim, nodes = _mk_sim(5, topology="ring", transitive=True,
+                         bottom=AWORSet.bottom())
+    nodes[0].operation(lambda X: X.add_delta(nodes[0].id, "only-at-n0"))
+    run_to_convergence(sim, nodes, interval=1.0)
+    assert all(n.X.elements() == {"only-at-n0"} for n in nodes)
+
+
+def test_partition_heals():
+    sim, nodes = _mk_sim(4, bottom=GCounter.bottom(), ship_state_every=4)
+    sim.add_partition(0.0, 50.0, ["n0", "n1"], ["n2", "n3"])
+    for n in nodes:
+        n.operation(lambda X, i=n.id: X.inc_delta(i, 2))
+    for n in nodes:
+        sim.every(1.0, n.on_periodic)
+    sim.run_until(40.0)
+    assert not converged(nodes)  # still partitioned
+    sim.run_until(400.0)
+    assert converged(nodes)
+    assert nodes[0].X.value() == 8
+
+
+def test_crash_recovery_durable_state_survives():
+    sim, nodes = _mk_sim(3, bottom=GCounter.bottom(), ship_state_every=3)
+    nodes[0].operation(lambda X: X.inc_delta("n0", 5))
+    sim.crash("n0", downtime=5.0)
+    sim.run_until(10.0)
+    assert nodes[0].X.value() == 5       # durable X survived
+    assert nodes[0].D == GCounter.bottom()  # volatile D lost
+    run_to_convergence(sim, nodes, interval=1.0)
+    assert nodes[1].X.value() == 5
+
+
+@pytest.mark.parametrize("name", ["gcounter", "aworset", "mvreg", "ormap"])
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_random_workload_converges(name, seed):
+    ad = ADAPTERS[name]
+    rng = random.Random(seed)
+    sim, nodes = _mk_sim(3, loss=0.2, seed=seed, ship_state_every=4,
+                         bottom=ad.bottom)
+    for _ in range(15):
+        n = rng.choice(nodes)
+        op = rng.choice(ad.ops)
+        args = op.make_args(rng)
+        n.operation(lambda X, i=n.id, op=op, args=args: op.delta(X, i, *args))
+    run_to_convergence(sim, nodes, interval=1.0)
+    assert converged(nodes)

@@ -1,0 +1,161 @@
+"""Algorithm 2 (causal anti-entropy): convergence under loss/dup/reorder
+WITHOUT full-state-per-k fallback (acks + retransmission recover lost
+deltas), the causal delta-merging condition / Prop. 2 correspondence
+(ghost-checked: joining a delta-interval == joining the sender's full
+state), delta GC, and crash/recovery with durable (X, c)."""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from crdt_adapters import ADAPTERS, random_reachable_states
+from repro.core import (AWORSet, CausalNode, GCounter, MVRegister, NetConfig,
+                        Simulator, converged, run_to_convergence,
+                        structural_size)
+
+
+def _mk(n, loss=0.0, dup=0.0, seed=0, bottom=None, ghost=True, fanout=1):
+    sim = Simulator(NetConfig(loss=loss, dup=dup, seed=seed))
+    ids = [f"n{k}" for k in range(n)]
+    rng = random.Random(seed + 1)
+    nodes = [sim.add_node(CausalNode(
+        i, bottom, [j for j in ids if j != i], rng=rng,
+        ghost_check=ghost, fanout=fanout)) for i in ids]
+    return sim, nodes
+
+
+def _assert_no_ghost_failures(nodes):
+    fails = [f for n in nodes for f in n.ghost_failures]
+    assert not fails, fails
+
+
+def test_converges_under_heavy_loss_without_state_fallback():
+    sim, nodes = _mk(4, loss=0.4, dup=0.25, seed=3, bottom=GCounter.bottom())
+    rng = random.Random(5)
+    for _ in range(40):
+        n = rng.choice(nodes)
+        n.operation(lambda X, i=n.id: X.inc_delta(i))
+    run_to_convergence(sim, nodes, interval=1.0, max_time=30_000)
+    assert nodes[0].X.value() == 40
+    _assert_no_ghost_failures(nodes)
+
+
+def test_prop2_correspondence_ghost_check():
+    """Prop. 2: every delta-interval join equals the corresponding
+    full-state join — checked at every delivery on a lossy network."""
+    sim, nodes = _mk(5, loss=0.3, dup=0.2, seed=11, bottom=AWORSet.bottom())
+    rng = random.Random(13)
+    elems = ["a", "b", "c"]
+    for step in range(60):
+        n = rng.choice(nodes)
+        if rng.random() < 0.7:
+            e = rng.choice(elems)
+            n.operation(lambda X, i=n.id, e=e: X.add_delta(i, e))
+        else:
+            e = rng.choice(elems)
+            n.operation(lambda X, i=n.id, e=e: X.rmv_delta(i, e))
+        sim.run_for(0.5)
+    run_to_convergence(sim, nodes, interval=1.0, max_time=30_000)
+    _assert_no_ghost_failures(nodes)
+
+
+def test_causal_context_stays_compressed():
+    """Under Algorithm 2 the OR-Set causal context must compress to a bare
+    version vector at quiescence (§7.2): gap-free delivery per sender."""
+    sim, nodes = _mk(3, loss=0.2, seed=17, bottom=AWORSet.bottom())
+    rng = random.Random(19)
+    for _ in range(30):
+        n = rng.choice(nodes)
+        n.operation(lambda X, i=n.id: X.add_delta(i, rng.choice("xyz")))
+        sim.run_for(0.3)
+    run_to_convergence(sim, nodes, interval=1.0, max_time=30_000)
+    for n in nodes:
+        assert n.X.ctx.cloud == frozenset(), n.X.ctx
+    _assert_no_ghost_failures(nodes)
+
+
+def test_delta_gc_bounds_buffer():
+    sim, nodes = _mk(3, loss=0.0, seed=23, bottom=GCounter.bottom())
+    rng = random.Random(23)
+    for k in range(50):
+        n = rng.choice(nodes)
+        n.operation(lambda X, i=n.id: X.inc_delta(i))
+        sim.run_for(2.0)  # anti-entropy keeps pace
+    run_to_convergence(sim, nodes, interval=1.0)
+    for n in nodes:
+        n.gc_deltas()
+        # acked-by-all prefix was collected: buffer ≪ number of ops
+        assert len(n.D) < 50 / 2
+
+
+def test_crash_recovery_full_state_fallback():
+    """After a crash, (D, A) are lost but (X, c) are durable; the paper's
+    fallback (receiver behind the GC horizon gets the full state) must
+    restore convergence, and the durable counter must prevent sequence
+    reuse (the ack-skipping hazard of §6.1)."""
+    sim, nodes = _mk(3, loss=0.1, seed=29, bottom=GCounter.bottom())
+    rng = random.Random(31)
+    for _ in range(10):
+        n = rng.choice(nodes)
+        n.operation(lambda X, i=n.id: X.inc_delta(i))
+        sim.run_for(1.0)
+    c_before = nodes[0].c
+    sim.crash("n0", downtime=3.0)
+    sim.run_until(sim.time + 5.0)
+    assert nodes[0].c == c_before       # durable c survived
+    assert nodes[0].D == {}             # volatile lost
+    for _ in range(10):
+        n = rng.choice(nodes)
+        n.operation(lambda X, i=n.id: X.inc_delta(i))
+        sim.run_for(1.0)
+    run_to_convergence(sim, nodes, interval=1.0, max_time=30_000)
+    assert nodes[0].X.value() == 20
+    _assert_no_ghost_failures(nodes)
+
+
+def test_delta_messages_much_smaller_than_state():
+    """§9 intuition at the protocol level: with a large OR-Set state, the
+    per-round delta payloads are far smaller than full-state payloads."""
+    bottom = AWORSet.bottom()
+    sim, nodes = _mk(3, loss=0.0, seed=37, bottom=bottom, ghost=False)
+    # grow a big set everywhere first
+    for k in range(200):
+        nodes[k % 3].operation(
+            lambda X, i=nodes[k % 3].id, k=k: X.add_delta(i, f"e{k}"))
+    run_to_convergence(sim, nodes, interval=1.0)
+    sim.run_for(40.0)  # let acks settle and GC clear the delta buffers
+    for n in nodes:
+        n.gc_deltas()
+    state_size = structural_size(nodes[0].X)
+    sim.stats.bytes_by_kind.clear()
+    sim.stats.by_kind.clear()
+    # now a handful of fresh updates, shipped as delta-intervals
+    for k in range(5):
+        nodes[0].operation(lambda X: X.add_delta("n0", f"fresh{k}"))
+    run_to_convergence(sim, nodes, interval=1.0)
+    delta_msgs = sim.stats.by_kind.get("delta", 0)
+    delta_bytes = sim.stats.bytes_by_kind.get("delta", 0)
+    assert delta_msgs > 0
+    avg_delta = delta_bytes / delta_msgs
+    assert avg_delta < state_size / 10, (avg_delta, state_size)
+
+
+@pytest.mark.parametrize("name", ["gcounter", "aworset", "rworset", "mvreg",
+                                  "ormap", "lwwset"])
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_random_workload_causal_convergence(name, seed):
+    ad = ADAPTERS[name]
+    rng = random.Random(seed)
+    sim, nodes = _mk(3, loss=0.25, dup=0.15, seed=seed, bottom=ad.bottom)
+    for _ in range(20):
+        n = rng.choice(nodes)
+        op = rng.choice(ad.ops)
+        args = op.make_args(rng)
+        n.operation(lambda X, i=n.id, op=op, args=args: op.delta(X, i, *args))
+        if rng.random() < 0.5:
+            sim.run_for(0.5)
+    run_to_convergence(sim, nodes, interval=1.0, max_time=60_000)
+    assert converged(nodes)
+    _assert_no_ghost_failures(nodes)

@@ -1,0 +1,86 @@
+"""Causal-context compression (§7.2): the compressed representation
+(version-vector prefix + dot cloud) must be semantically identical to an
+explicit set of dots, and compress to a bare version vector under causally
+consistent (gap-free) histories."""
+
+import random
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CausalContext
+
+RIDS = ["a", "b", "c"]
+
+
+def _random_dots(rng, n):
+    return [(rng.choice(RIDS), rng.randint(1, 12)) for _ in range(n)]
+
+
+@settings(max_examples=100, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_compressed_equals_model_set(seed):
+    rng = random.Random(seed)
+    dots = _random_dots(rng, rng.randint(0, 25))
+    cc = CausalContext.from_dots(dots)
+    model = set(dots)
+    # contains() agrees with the model on all queried dots
+    for i in RIDS:
+        for k in range(1, 15):
+            assert cc.contains((i, k)) == ((i, k) in model) or cc.contains((i, k)) == ((i, k) in model), (i, k)
+    # ... and the reconstructed explicit dot set is exactly the model
+    assert cc.dots() == frozenset(model)
+    # max_for / next_dot agree with the model
+    for i in RIDS:
+        ks = [k for (j, k) in model if j == i]
+        assert cc.max_for(i) == (max(ks) if ks else 0)
+        assert cc.next_dot(i) == (i, (max(ks) if ks else 0) + 1)
+
+
+@settings(max_examples=100, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_join_is_union(seed):
+    rng = random.Random(seed)
+    d1 = _random_dots(rng, rng.randint(0, 15))
+    d2 = _random_dots(rng, rng.randint(0, 15))
+    a = CausalContext.from_dots(d1)
+    b = CausalContext.from_dots(d2)
+    assert a.join(b).dots() == frozenset(d1) | frozenset(d2)
+    assert a.join(b) == b.join(a)
+    assert a.join(a) == a
+    assert a.join(CausalContext.bottom()) == a
+
+
+@settings(max_examples=100, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_gap_free_history_compresses_to_version_vector(seed):
+    """Under causal anti-entropy contexts are contiguous per replica
+    (paper: 1 ≤ n ≤ max{k | (j,k) ∈ cᵢ} ⇒ (j,n) ∈ cᵢ) — the cloud must be
+    empty and the whole context lives in the version vector."""
+    rng = random.Random(seed)
+    cc = CausalContext.bottom()
+    counters = {i: 0 for i in RIDS}
+    for _ in range(rng.randint(0, 30)):
+        i = rng.choice(RIDS)
+        counters[i] += 1
+        cc = cc.add_dot((i, counters[i]))
+    assert cc.cloud == frozenset()
+    assert cc.vv_dict() == {i: n for i, n in counters.items() if n > 0}
+
+
+def test_cloud_absorbed_when_gap_fills():
+    cc = CausalContext.from_dots([("a", 1), ("a", 3), ("a", 4)])
+    assert cc.vv_dict() == {"a": 1}
+    assert cc.cloud == frozenset({("a", 3), ("a", 4)})
+    cc2 = cc.add_dot(("a", 2))  # gap fills -> full absorption
+    assert cc2.vv_dict() == {"a": 4}
+    assert cc2.cloud == frozenset()
+
+
+def test_representation_canonical_for_equality():
+    """Equal dot sets must compare equal regardless of insertion order —
+    needed because CRDT equality is structural."""
+    import itertools
+    dots = [("a", 2), ("a", 1), ("b", 1), ("a", 4)]
+    reference = CausalContext.from_dots(dots)
+    for perm in itertools.permutations(dots):
+        assert CausalContext.from_dots(perm) == reference

@@ -1,0 +1,112 @@
+"""Delta-interval checkpointing: snapshot ⊔ delta-log restore, atomicity
+under crash (orphan temp files), idempotent re-restore, GC, and the
+pytree bridge used for real model/optimizer state."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (DeltaCheckpointStore, pytree_from_state,
+                              state_from_pytree)
+from repro.core.tensor_lattice import TensorState, chunk_tensor
+
+
+def _params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "layer0": {"w": rng.normal(size=(8, 8)).astype(np.float32),
+                   "b": rng.normal(size=(8,)).astype(np.float32)},
+        "emb": rng.normal(size=(16, 4)).astype(np.float32),
+    }
+
+
+def test_snapshot_restore_roundtrip(tmp_path):
+    store = DeltaCheckpointStore(str(tmp_path))
+    state, spec = state_from_pytree(_params(), chunk_size=16, rank=0)
+    store.save_snapshot(state, seq=0)
+    restored, seq = store.restore()
+    assert seq == 0
+    assert restored == state
+    back = pytree_from_state(restored, spec)
+    for (pa, la), (pb, lb) in zip(
+            jax.tree_util.tree_flatten_with_path(_params())[0][0:0] or [],
+            []):
+        pass
+    assert np.allclose(back["layer0"]["w"], _params()["layer0"]["w"])
+    assert np.allclose(back["emb"], _params()["emb"])
+
+
+def test_delta_log_restore(tmp_path):
+    store = DeltaCheckpointStore(str(tmp_path))
+    state, spec = state_from_pytree(_params(), chunk_size=16, rank=0)
+    store.save_snapshot(state, seq=0)
+    # three incremental updates, each checkpointed as a delta only
+    for k in range(1, 4):
+        new_emb = np.full((16, 4), float(k), np.float32)
+        delta = state.write_delta(0, "['emb']", new_emb)
+        state = state.join(delta)
+        store.append_delta(delta, seq=k)
+    restored, seq = store.restore()
+    assert seq == 3
+    assert restored == state
+    back = pytree_from_state(restored, spec)
+    assert np.allclose(back["emb"], 3.0)
+
+
+def test_delta_log_must_be_contiguous(tmp_path):
+    """The on-disk causal delta-merging condition: no gaps in the log."""
+    store = DeltaCheckpointStore(str(tmp_path))
+    state, _ = state_from_pytree(_params(), chunk_size=16, rank=0)
+    store.save_snapshot(state, seq=0)
+    delta = state.write_delta(0, "['emb']", np.ones((16, 4), np.float32))
+    with pytest.raises(AssertionError):
+        store.append_delta(delta, seq=5)  # gap
+
+
+def test_crash_leaves_consistent_prefix(tmp_path):
+    store = DeltaCheckpointStore(str(tmp_path))
+    state, _ = state_from_pytree(_params(), chunk_size=16, rank=0)
+    store.save_snapshot(state, seq=0)
+    d1 = state.write_delta(0, "['emb']", np.ones((16, 4), np.float32))
+    store.append_delta(d1, seq=1)
+    # simulate a crash mid-write: an orphan temp file appears
+    with open(os.path.join(str(tmp_path), "junk.tmp"), "wb") as f:
+        f.write(b"partial garbage")
+    restored, seq = store.restore()
+    assert seq == 1
+    assert restored == state.join(d1)
+
+
+def test_restore_is_idempotent(tmp_path):
+    store = DeltaCheckpointStore(str(tmp_path))
+    state, _ = state_from_pytree(_params(), chunk_size=16, rank=0)
+    store.save_snapshot(state, seq=0)
+    d1 = state.write_delta(0, "['emb']", np.ones((16, 4), np.float32))
+    store.append_delta(d1, seq=1)
+    r1, _ = store.restore()
+    r2, _ = store.restore()
+    assert r1 == r2
+    # joining a restore into live state is harmless (idempotence)
+    live = state.join(d1)
+    assert live.join(r1) == live
+
+
+def test_gc_keeps_restorability(tmp_path):
+    store = DeltaCheckpointStore(str(tmp_path))
+    state, _ = state_from_pytree(_params(), chunk_size=16, rank=0)
+    store.save_snapshot(state, seq=0)
+    for k in range(1, 4):
+        delta = state.write_delta(0, "['emb']",
+                                  np.full((16, 4), float(k), np.float32))
+        state = state.join(delta)
+        store.append_delta(delta, seq=k)
+    store.save_snapshot(state, seq=4)   # consolidating snapshot
+    store.gc(keep_snapshots=1)
+    files = os.listdir(str(tmp_path))
+    assert not any(f.startswith("delta-") for f in files)
+    assert sum(f.startswith("snapshot-") for f in files) == 1
+    restored, _ = store.restore()
+    assert restored == state

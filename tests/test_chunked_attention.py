@@ -1,0 +1,81 @@
+"""Chunked (trace-time flash) attention == naive attention, across GQA,
+windows, softcaps, and uneven block splits; and the whole-model forward
+must be invariant to the attention implementation."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_batch
+from repro.models import forward, init_model
+from repro.models.attention import _mha_chunked, _mha_core
+from repro.models.config import ModelConfig
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=1, d_model=64,
+                n_heads=4, n_kv_heads=2, d_ff=128, vocab=64,
+                dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.mark.parametrize("window", [None, 48, 128])
+@pytest.mark.parametrize("block", [32, 64, 256])
+def test_chunked_matches_naive(window, block):
+    cfg = _cfg(attn_block=block)
+    rng = np.random.default_rng(0)
+    b, s, H, KV, hd = 2, 256, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, s, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, KV, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, KV, hd)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    naive = _mha_core(cfg, q, k, v, pos, pos, window)
+    chunked = _mha_chunked(cfg, q, k, v, pos, pos, window, block)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(naive),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_with_softcap_and_query_scale():
+    cfg = _cfg(attn_softcap=30.0, query_scale=0.125, attn_block=64)
+    rng = np.random.default_rng(1)
+    b, s = 1, 128
+    q = jnp.asarray(rng.normal(size=(b, s, 4, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, 2, 16)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, 2, 16)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    naive = _mha_core(cfg, q, k, v, pos, pos, None)
+    chunked = _mha_chunked(cfg, q, k, v, pos, pos, None, 64)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(naive),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_indivisible_length_falls_back():
+    cfg = _cfg()
+    rng = np.random.default_rng(2)
+    b, s = 1, 100   # not divisible by 64
+    q = jnp.asarray(rng.normal(size=(b, s, 4, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, 2, 16)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, 2, 16)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    out = _mha_chunked(cfg, q, k, v, pos, pos, None, 64)
+    ref = _mha_core(cfg, q, k, v, pos, pos, None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5,
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x22b", "gemma2-27b",
+                                  "qwen2-1.5b"])
+def test_model_forward_invariant_to_attn_impl(arch):
+    cfg = get_config(arch, reduced=True)
+    cfg_chunked = dataclasses.replace(cfg, attn_impl="chunked",
+                                      attn_block=8)
+    params, _ = init_model(cfg, jax.random.PRNGKey(0))
+    batch = smoke_batch(cfg, b=2, s=16, train=False)
+    l0, _ = forward(cfg, params, batch, remat=False)
+    l1, _ = forward(cfg_chunked, params, batch, remat=False)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                               rtol=3e-4, atol=3e-4)

@@ -1,0 +1,218 @@
+"""Datatype-specific semantics from the paper: add-wins (§7), remove-wins,
+multi-value register sibling semantics (§8), counter values, observed-remove
+behaviour, ORMap composition (the Riak-DT-Map use case of §1)."""
+
+from repro.core import (AWORSet, AWORSetTombstone, DWFlag, EWFlag, GCounter,
+                        GSet, LWWRegister, LWWSet, MVRegister, ORMap,
+                        PNCounter, RWORSet, TwoPSet)
+
+
+# ---------------------------------------------------------------------------
+# Counters
+# ---------------------------------------------------------------------------
+
+def test_gcounter_concurrent_increments_all_counted():
+    a = GCounter.bottom().join(GCounter.bottom().inc_delta("a", 3))
+    b = GCounter.bottom().join(GCounter.bottom().inc_delta("b", 4))
+    assert a.join(b).value() == 7
+
+
+def test_gcounter_duplicate_delta_is_idempotent():
+    X = GCounter.bottom()
+    d = X.inc_delta("a")
+    X = X.join(d).join(d).join(d)  # re-delivered duplicates
+    assert X.value() == 1
+
+
+def test_pncounter():
+    X = PNCounter.bottom()
+    X = X.join(X.inc_delta("a", 5))
+    X = X.join(X.dec_delta("b", 2))
+    assert X.value() == 3
+
+
+# ---------------------------------------------------------------------------
+# Add-wins OR-Set — both versions agree on visible semantics
+# ---------------------------------------------------------------------------
+
+def _concurrent_add_rmv(cls):
+    """Replicas a and b sync on {x}; then a removes x while b re-adds x."""
+    base = cls.bottom()
+    base = base.join(base.add_delta("a", "x"))
+    ra = base
+    rb = base
+    ra = ra.join(ra.rmv_delta("a", "x"))      # remove at a
+    rb = rb.join(rb.add_delta("b", "x"))      # concurrent add at b
+    return ra.join(rb)
+
+
+def test_aworset_add_wins_optimized():
+    assert _concurrent_add_rmv(AWORSet).elements() == {"x"}
+
+
+def test_aworset_add_wins_tombstone():
+    assert _concurrent_add_rmv(AWORSetTombstone).elements() == {"x"}
+
+
+def test_rworset_remove_wins():
+    assert _concurrent_add_rmv(RWORSet).elements() == set()
+
+
+def test_aworset_remove_only_affects_observed_adds():
+    """Remove only affects causally preceding adds (paper §7)."""
+    a = AWORSet.bottom()
+    b = AWORSet.bottom()
+    b = b.join(b.add_delta("b", "x"))
+    # a never saw b's add; a's remove of x is a no-op delta
+    d = a.rmv_delta("a", "x")
+    assert a.join(d).join(b).elements() == {"x"}
+
+
+def test_aworset_sequential_add_remove():
+    X = AWORSet.bottom()
+    X = X.join(X.add_delta("a", "x"))
+    X = X.join(X.add_delta("a", "y"))
+    X = X.join(X.rmv_delta("a", "x"))
+    assert X.elements() == {"y"}
+    # removed element's triple is gone from the store (optimized: shrinks)
+    assert len(X.store.entries) == 1
+
+
+def test_aworset_tombstone_state_grows_but_optimized_shrinks():
+    t = AWORSetTombstone.bottom()
+    o = AWORSet.bottom()
+    for k in range(5):
+        t = t.join(t.add_delta("a", f"e{k}"))
+        o = o.join(o.add_delta("a", f"e{k}"))
+    for k in range(5):
+        t = t.join(t.rmv_delta("a", f"e{k}"))
+        o = o.join(o.rmv_delta("a", f"e{k}"))
+    assert t.elements() == o.elements() == set()
+    assert len(t.s) == 5               # tombstone version retains all triples
+    assert len(o.store.entries) == 0   # optimized version shrank to nothing
+    # and the optimized causal context compressed into a bare version vector
+    assert o.ctx.cloud == frozenset()
+    assert o.ctx.vv_dict() == {"a": 5}
+
+
+def test_reissued_tag_does_not_resurrect():
+    """Adding again after removal issues a FRESH dot (from the causal
+    context), so the old removal cannot cancel the new add."""
+    X = AWORSet.bottom()
+    X = X.join(X.add_delta("a", "x"))      # dot (a,1)
+    X = X.join(X.rmv_delta("a", "x"))      # (a,1) covered
+    X = X.join(X.add_delta("a", "x"))      # must use dot (a,2)
+    assert X.elements() == {"x"}
+    assert X.store.entries[0][0] == ("a", 2)
+
+
+# ---------------------------------------------------------------------------
+# Multi-value register (Fig. 4)
+# ---------------------------------------------------------------------------
+
+def test_mvreg_concurrent_writes_become_siblings():
+    base = MVRegister.bottom()
+    a = base.join(base.write_delta("a", 1))
+    b = base.join(base.write_delta("b", 2))
+    joined = a.join(b)
+    assert joined.read() == {1, 2}
+    # a later write at either replica overwrites both siblings
+    final = joined.join(joined.write_delta("a", 3))
+    assert final.read() == {3}
+
+
+def test_mvreg_sequential_overwrite():
+    X = MVRegister.bottom()
+    X = X.join(X.write_delta("a", 10))
+    X = X.join(X.write_delta("a", 11))
+    assert X.read() == {11}
+    assert len(X.store.entries) == 1
+
+
+def test_mvreg_no_version_vectors_in_state():
+    """§9: the optimized MVR carries scalar dots, not per-value version
+    vectors — worst-case meta-data Õ(|I|), not Õ(|I|²)."""
+    X = MVRegister.bottom()
+    for r in [f"r{k}" for k in range(8)]:
+        X = X.join(X.write_delta(r, r))  # 8 concurrent-ish writers
+    for dot, _ in X.store.entries:
+        assert isinstance(dot, tuple) and len(dot) == 2  # a single scalar tag
+
+
+# ---------------------------------------------------------------------------
+# LWW / flags / sets
+# ---------------------------------------------------------------------------
+
+def test_lww_register_highest_stamp_wins():
+    a = LWWRegister.bottom().write_delta("a", 5, "va")
+    b = LWWRegister.bottom().write_delta("b", 7, "vb")
+    assert a.join(b).read() == "vb"
+    assert b.join(a).read() == "vb"
+
+
+def test_lww_register_tie_broken_by_replica_id():
+    a = LWWRegister.bottom().write_delta("a", 5, "va")
+    b = LWWRegister.bottom().write_delta("b", 5, "vb")
+    assert a.join(b).read() == "vb"  # 'b' > 'a'
+
+
+def test_lwwset():
+    X = LWWSet.bottom()
+    X = X.join(X.add_delta("a", 1, "x"))
+    X = X.join(X.rmv_delta("a", 2, "x"))
+    X = X.join(X.add_delta("b", 3, "y"))
+    assert X.elements() == {"y"}
+
+
+def test_2pset_remove_is_permanent():
+    X = TwoPSet.bottom()
+    X = X.join(X.add_delta("x"))
+    X = X.join(X.rmv_delta("x"))
+    X = X.join(X.add_delta("x"))
+    assert X.elements() == set()
+
+
+def test_flags():
+    base = EWFlag.bottom()
+    e = base.join(base.enable_delta("a"))
+    d = base.join(base.disable_delta("b"))
+    assert e.join(d).read() is True  # enable wins
+
+    base = DWFlag.bottom()
+    base = base.join(base.enable_delta("a"))
+    e = base.join(base.enable_delta("a"))
+    dd = base.join(base.disable_delta("b"))
+    assert e.join(dd).read() is False  # disable wins
+
+
+# ---------------------------------------------------------------------------
+# ORMap composition
+# ---------------------------------------------------------------------------
+
+def test_ormap_embedded_sets():
+    X = ORMap.bottom()
+    X = X.join(X.apply_delta("a", "tags", AWORSet, "add_delta", "t1"))
+    X = X.join(X.apply_delta("a", "tags", AWORSet, "add_delta", "t2"))
+    X = X.join(X.apply_delta("b", "users", AWORSet, "add_delta", "u1"))
+    assert X.keys() == {"tags", "users"}
+    assert X.get_value("tags", AWORSet).elements() == {"t1", "t2"}
+    assert X.get_value("users", AWORSet).elements() == {"u1"}
+
+
+def test_ormap_key_removal_is_observed_remove():
+    base = ORMap.bottom()
+    base = base.join(base.apply_delta("a", "k", AWORSet, "add_delta", "v1"))
+    ra = base.join(base.rmv_delta("a", "k"))              # remove key at a
+    rb = base.join(base.apply_delta("b", "k", AWORSet, "add_delta", "v2"))
+    joined = ra.join(rb)
+    # add-wins inside the map: the concurrently-added element survives,
+    # the observed one is gone
+    assert joined.get_value("k", AWORSet).elements() == {"v2"}
+
+
+def test_ormap_shared_context_keeps_dots_unique():
+    X = ORMap.bottom()
+    X = X.join(X.apply_delta("a", "k1", AWORSet, "add_delta", "v"))
+    X = X.join(X.apply_delta("a", "k2", AWORSet, "add_delta", "v"))
+    dots = X.store.all_dots()
+    assert len(dots) == 2  # distinct dots across keys (shared context)

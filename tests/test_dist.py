@@ -1,0 +1,145 @@
+"""Distribution-layer unit tests: greedy sharding assignment with
+divisibility fallbacks, layout factoring, HLO collective parsing, roofline
+arithmetic. These run without the 512-device dry-run (mesh mocked)."""
+
+from types import SimpleNamespace
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.hlo import collective_bytes, collective_count
+from repro.dist.roofline import roofline
+from repro.dist.shardings import MeshRules, spec_for
+from repro.models.config import LayerSpec, layout_groups
+
+
+def _rules(pod=False):
+    shape = {"pod": 2, "data": 16, "model": 16} if pod else \
+        {"data": 16, "model": 16}
+    mesh = SimpleNamespace(shape=shape)
+    fsdp = [("pod", "data"), ("data",)] if pod else [("data",)]
+    return MeshRules(mesh=mesh,
+                     batch_axes=("pod", "data") if pod else ("data",),
+                     candidates={
+                         "vocab": [("model",)], "embed": fsdp,
+                         "mlp": [("model",)], "heads": [("model",)],
+                         "kv": [("model",)], "expert": [("model",)],
+                         "lora": [], "layers": [],
+                     })
+
+
+def test_greedy_assignment_one_axis_per_tensor():
+    r = _rules()
+    # deepseek expert weight [160, 5120, 1536]: expert wins the model axis,
+    # embed gets data, mlp must fall back to replicated (model taken)
+    assert spec_for((160, 5120, 1536), ("expert", "embed", "mlp"), r) == \
+        P("model", "data")
+
+
+def test_divisibility_fallback_replicates():
+    r = _rules()
+    # mixtral has 8 experts on a 16-way model axis: not divisible -> the
+    # expert dim replicates and mlp gets the model axis instead
+    assert spec_for((8, 6144, 16384), ("expert", "embed", "mlp"), r) == \
+        P(None, "data", "model")
+    assert any("expert" in f for f in r.fallbacks)
+
+
+def test_multi_pod_fsdp_spans_pod_and_data():
+    r = _rules(pod=True)
+    assert spec_for((5120, 1536), ("embed", "mlp"), r) == \
+        P(("pod", "data"), "model")
+    # dim not divisible by pod*data falls back to data-only FSDP
+    assert spec_for((48, 128), ("embed", "mlp"), r) == P("data", "model")
+
+
+def test_trailing_nones_trimmed():
+    r = _rules()
+    assert spec_for((1024,), ("lora",), r) == P()
+
+
+# ---------------------------------------------------------------------------
+# Layout factoring
+# ---------------------------------------------------------------------------
+
+def test_layout_groups_homogeneous():
+    layout = tuple(LayerSpec() for _ in range(56))
+    assert layout_groups(layout) == [((LayerSpec(),), 56)]
+
+
+def test_layout_groups_alternating_period2():
+    lo = LayerSpec(window=4096)
+    gl = LayerSpec(window=None)
+    layout = tuple(lo if i % 2 == 0 else gl for i in range(46))
+    groups = layout_groups(layout)
+    assert groups == [((lo, gl), 23)]
+
+
+def test_layout_groups_period8_jamba():
+    layout = tuple(
+        LayerSpec(kind=("attn" if i % 8 == 4 else "ssm"),
+                  mlp=("moe" if i % 2 == 1 else "dense"))
+        for i in range(32))
+    groups = layout_groups(layout)
+    assert len(groups) == 1 and groups[0][1] == 4
+    assert len(groups[0][0]) == 8
+
+
+def test_layout_groups_runs_fallback_deepseek():
+    dense = LayerSpec(kind="mla", mlp="dense")
+    moe = LayerSpec(kind="mla", mlp="moe")
+    layout = (dense,) + tuple(moe for _ in range(59))
+    groups = layout_groups(layout)
+    assert groups == [((dense,), 1), ((moe,), 59)]
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+HLO = """
+  %ag = bf16[16,512,128]{2,1,0} all-gather(%x), replica_groups=[32,16]<=[512], dimensions={1}
+  %ar = f32[1024,1024]{1,0} all-reduce(%y), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %rs = bf16[64,128]{1,0} reduce-scatter(%z), replica_groups=[2,256]<=[512], dimensions={0}
+  %cp = bf16[8,128]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %agd = bf16[4,4]{1,0} all-gather-done(%ag)
+"""
+
+
+def test_collective_bytes_ring_costs():
+    total, per_kind = collective_bytes(HLO, 512)
+    ag = 16 * 512 * 128 * 2 * (16 - 1) / 16          # result·(G-1)/G
+    ar = 1024 * 1024 * 4 * 2 * (4 - 1) / 4           # 2·size·(G-1)/G
+    rs = 64 * 128 * 2 * (256 - 1)                    # result·(G-1)
+    cp = 8 * 128 * 2
+    assert per_kind["all-gather"] == pytest.approx(ag)
+    assert per_kind["all-reduce"] == pytest.approx(ar)
+    assert per_kind["reduce-scatter"] == pytest.approx(rs)
+    assert per_kind["collective-permute"] == pytest.approx(cp)
+    assert total == pytest.approx(ag + ar + rs + cp)
+
+
+def test_collective_count_ignores_done():
+    counts = collective_count(HLO)
+    assert counts == {"all-gather": 1, "all-reduce": 1,
+                      "reduce-scatter": 1, "collective-permute": 1}
+
+
+# ---------------------------------------------------------------------------
+# Roofline arithmetic
+# ---------------------------------------------------------------------------
+
+def test_roofline_bound_selection():
+    rep = roofline("a", "s", "16x16", 256,
+                   {"flops": 197e12 * 0.5, "bytes accessed": 819e9 * 2.0},
+                   wire_bytes=50e9 * 0.1, per_kind={},
+                   model_flops_total=197e12 * 0.5 * 256 * 0.8,
+                   tokens=1)
+    assert rep.bound == "memory"
+    assert rep.compute_s == pytest.approx(0.5)
+    assert rep.memory_s == pytest.approx(2.0)
+    assert rep.collective_s == pytest.approx(0.1)
+    assert rep.useful_frac == pytest.approx(0.8)
+    # roofline fraction: useful compute time / bound time
+    assert rep.roofline_frac == pytest.approx(0.5 * 0.8 / 2.0)

@@ -1,0 +1,96 @@
+"""delta_join / chunk_digest Pallas kernels vs oracles + lattice-law checks
+of the kernel itself (the kernel IS the join, so it must satisfy the join
+laws), plus integration with the TensorState lattice."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+
+
+def _mk(n, chunk, dtype, seed):
+    rng = np.random.default_rng(seed)
+    vals = rng.normal(size=(n, chunk)).astype(np.float32)
+    vers = rng.integers(0, 50, size=(n,)).astype(np.int32)
+    return jnp.asarray(vals, dtype), jnp.asarray(vers)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,chunk,bn", [
+    (256, 128, 128), (1024, 256, 256), (64, 512, 64), (8, 128, 8),
+])
+def test_delta_join_matches_ref(dtype, n, chunk, bn):
+    av, avers = _mk(n, chunk, dtype, 0)
+    bv, bvers = _mk(n, chunk, dtype, 1)
+    ov, overs = ops.delta_join(av, avers, bv, bvers, block_n=bn,
+                               interpret=True)
+    rv, rvers = ops.delta_join_ref(av, avers, bv, bvers)
+    np.testing.assert_array_equal(np.asarray(ov), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(overs), np.asarray(rvers))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_delta_join_kernel_is_a_join(seed):
+    """Kernel-level lattice laws: idempotent / commutative / associative.
+    (Ties must carry equal values, as the TensorState lattice guarantees.)"""
+    rng = np.random.default_rng(seed)
+    n, chunk = 64, 128
+    # versions drawn so that equal versions ⇒ equal values (the lattice
+    # precondition): derive each chunk's values from its version
+    vers = rng.integers(0, 6, size=(3, n)).astype(np.int32)
+    vals = vers[..., None].astype(np.float32) * np.ones((1, 1, chunk),
+                                                        np.float32)
+    a, b, c = [(jnp.asarray(vals[i]), jnp.asarray(vers[i])) for i in range(3)]
+
+    def J(x, y):
+        return ops.delta_join(x[0], x[1], y[0], y[1], block_n=n,
+                              interpret=True)
+
+    def eq(x, y):
+        return (np.array_equal(np.asarray(x[0]), np.asarray(y[0]))
+                and np.array_equal(np.asarray(x[1]), np.asarray(y[1])))
+
+    assert eq(J(a, a), a)                      # idempotent
+    assert eq(J(a, b), J(b, a))                # commutative
+    assert eq(J(J(a, b), c), J(a, J(b, c)))    # associative
+
+
+@pytest.mark.parametrize("n,chunk,bn", [(256, 128, 128), (32, 256, 32)])
+def test_chunk_digest_matches_ref(n, chunk, bn):
+    x, _ = _mk(n, chunk, jnp.float32, 7)
+    ma, ss = ops.chunk_digest(x, block_n=bn, interpret=True)
+    rma, rss = ops.chunk_digest_ref(x)
+    np.testing.assert_allclose(np.asarray(ma), np.asarray(rma), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(ss), np.asarray(rss), rtol=1e-5)
+
+
+def test_kernel_join_equals_tensorstate_join():
+    """End-to-end: the Pallas join produces exactly the TensorState join."""
+    from repro.core.tensor_lattice import (ChunkedTensor, TensorState,
+                                           chunk_tensor)
+    rng = np.random.default_rng(3)
+    n, chunk = 16, 128
+    a_vals = rng.normal(size=(n, chunk)).astype(np.float32)
+    b_vals = rng.normal(size=(n, chunk)).astype(np.float32)
+    a_vers = rng.integers(0, 5, size=(n,)).astype(np.int32)
+    b_vers = rng.integers(0, 5, size=(n,)).astype(np.int32)
+    # ties must agree (lattice precondition)
+    tie = a_vers == b_vers
+    b_vals[tie] = a_vals[tie]
+
+    A = TensorState.of({"w": ChunkedTensor(jnp.asarray(a_vals),
+                                           jnp.asarray(a_vers))})
+    B = TensorState.of({"w": ChunkedTensor(jnp.asarray(b_vals),
+                                           jnp.asarray(b_vers))})
+    lattice_join = A.join(B).as_dict()["w"]
+    kv, kvers = ops.delta_join(jnp.asarray(a_vals), jnp.asarray(a_vers),
+                               jnp.asarray(b_vals), jnp.asarray(b_vers),
+                               block_n=n, interpret=True)
+    np.testing.assert_array_equal(np.asarray(lattice_join.values),
+                                  np.asarray(kv))
+    np.testing.assert_array_equal(np.asarray(lattice_join.versions),
+                                  np.asarray(kvers))

@@ -1,0 +1,128 @@
+"""Pallas flash-attention kernels vs the pure-jnp oracle: shape/dtype
+sweeps (GQA ratios, windows, softcaps, ring caches), interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+
+jax.config.update("jax_platforms", "cpu")
+
+
+def _mk(b, h, kv, sq, sk, hd, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, h, sq, hd)).astype(np.float32), dtype)
+    k = jnp.asarray(rng.normal(size=(b, kv, sk, hd)).astype(np.float32), dtype)
+    v = jnp.asarray(rng.normal(size=(b, kv, sk, hd)).astype(np.float32), dtype)
+    return q, k, v
+
+
+TOLS = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+        jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kv,s,hd,bq,bk", [
+    (1, 4, 4, 256, 64, 128, 128),    # MHA
+    (2, 8, 2, 256, 64, 128, 128),    # GQA 4:1
+    (1, 4, 1, 512, 128, 128, 128),   # MQA
+    (1, 2, 2, 128, 32, 64, 64),      # small blocks
+])
+def test_flash_fwd_matches_ref(dtype, b, h, kv, s, hd, bq, bk):
+    q, k, v = _mk(b, h, kv, s, s, hd, dtype)
+    out = ops.flash_attention(q, k, v, block_q=bq, block_k=bk,
+                              interpret=True)
+    want = ops.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               **TOLS[dtype])
+
+
+@pytest.mark.parametrize("window", [32, 128, 1000])
+def test_flash_fwd_sliding_window(window):
+    q, k, v = _mk(1, 4, 2, 256, 256, 64, jnp.float32)
+    out = ops.flash_attention(q, k, v, window=window, block_q=64,
+                              block_k=64, interpret=True)
+    want = ops.attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_fwd_softcap():
+    q, k, v = _mk(1, 2, 2, 128, 128, 64, jnp.float32, seed=3)
+    out = ops.flash_attention(q, k, v, softcap=30.0, block_q=64,
+                              block_k=64, interpret=True)
+    want = ops.attention_ref(q, k, v, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_fwd_scale_override():
+    q, k, v = _mk(1, 2, 2, 128, 128, 64, jnp.float32, seed=4)
+    out = ops.flash_attention(q, k, v, scale=0.0825, block_q=64,
+                              block_k=64, interpret=True)
+    want = ops.attention_ref(q, k, v, scale=0.0825)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Decode kernel (ring caches, partial fills, windows)
+# ---------------------------------------------------------------------------
+
+def _mk_cache(b, kv, C, hd, filled, dtype, seed=0, ring_window=None):
+    """Cache with `filled` tokens written; ring semantics if window."""
+    rng = np.random.default_rng(seed)
+    k = np.zeros((b, kv, C, hd), np.float32)
+    v = np.zeros((b, kv, C, hd), np.float32)
+    pos = np.full((b, C), -1, np.int32)
+    for t in range(filled):
+        slot = t % C
+        k[:, :, slot] = rng.normal(size=(b, kv, hd))
+        v[:, :, slot] = rng.normal(size=(b, kv, hd))
+        pos[:, slot] = t
+    return (jnp.asarray(k, dtype), jnp.asarray(v, dtype),
+            jnp.asarray(pos))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kv,C,hd,filled", [
+    (2, 4, 4, 256, 64, 256),    # full cache
+    (2, 8, 2, 256, 64, 100),    # partially filled (invalid slots masked)
+    (1, 4, 1, 512, 128, 300),
+])
+def test_flash_decode_matches_ref(dtype, b, h, kv, C, hd, filled):
+    k, v, kpos = _mk_cache(b, kv, C, hd, filled, dtype)
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(b, h, 1, hd)).astype(np.float32), dtype)
+    qpos = jnp.full((b, 1), filled, jnp.int32)
+    out = ops.flash_decode(q, k, v, qpos, kpos, block_k=128, interpret=True)
+    want = ops.decode_ref(q, k, v, qpos, kpos)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOLS[dtype])
+
+
+def test_flash_decode_ring_cache_with_window():
+    """SWA ring buffer: 300 tokens through a 128-slot ring, window 128."""
+    b, h, kv, C, hd = 1, 4, 2, 128, 64
+    k, v, kpos = _mk_cache(b, kv, C, hd, filled=300, dtype=jnp.float32,
+                           ring_window=128)
+    q = jnp.asarray(np.random.default_rng(2).normal(size=(b, h, 1, hd)),
+                    jnp.float32)
+    qpos = jnp.full((b, 1), 300, jnp.int32)
+    out = ops.flash_decode(q, k, v, qpos, kpos, window=128, block_k=64,
+                           interpret=True)
+    want = ops.decode_ref(q, k, v, qpos, kpos, window=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_decode_empty_cache_rows_are_zero():
+    b, h, kv, C, hd = 1, 2, 2, 128, 64
+    k, v, kpos = _mk_cache(b, kv, C, hd, filled=0, dtype=jnp.float32)
+    q = jnp.ones((b, h, 1, hd), jnp.float32)
+    qpos = jnp.zeros((b, 1), jnp.int32)
+    out = ops.flash_decode(q, k, v, qpos, kpos, interpret=True)
+    assert np.allclose(np.asarray(out), 0.0)

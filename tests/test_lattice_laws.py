@@ -1,0 +1,67 @@
+"""Join-semilattice laws for every datatype (paper §3: join is designed to
+be commutative, associative, and idempotent; mutators are inflations)."""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from crdt_adapters import ADAPTERS, REPLICAS, random_reachable_states
+
+ADAPTER_NAMES = sorted(ADAPTERS)
+
+
+@pytest.mark.parametrize("name", ADAPTER_NAMES)
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_join_laws(name, seed):
+    ad = ADAPTERS[name]
+    rng = random.Random(seed)
+    a, b, c = random_reachable_states(ad, rng, n_ops=12)
+
+    # idempotence, commutativity, associativity
+    assert a.join(a) == a
+    assert a.join(b) == b.join(a)
+    assert a.join(b).join(c) == a.join(b.join(c))
+
+    # bottom is the identity
+    assert a.join(ad.bottom) == a
+    assert ad.bottom.join(a) == a
+
+
+@pytest.mark.parametrize("name", ADAPTER_NAMES)
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_inflation_and_partial_order(name, seed):
+    """X ⊑ X ⊔ mᵟ(X) — the join-with-delta transition inflates (Def. 3),
+    and ``leq`` derived from join is a partial order on reachable states."""
+    ad = ADAPTERS[name]
+    rng = random.Random(seed)
+    a, b, _ = random_reachable_states(ad, rng, n_ops=10)
+
+    r = rng.choice(REPLICAS)
+    op = rng.choice(ad.ops)
+    args = op.make_args(rng)
+    d = op.delta(a, r, *args)
+    a2 = a.join(d)
+    assert a.leq(a2)
+
+    # partial order sanity
+    assert a.leq(a)
+    j = a.join(b)
+    assert a.leq(j) and b.leq(j)
+    if a.leq(b) and b.leq(a):
+        assert a == b
+
+
+@pytest.mark.parametrize("name", ADAPTER_NAMES)
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_join_is_lub(name, seed):
+    """⊔ is the *least* upper bound: any common upper bound u of {a, b}
+    dominates a ⊔ b."""
+    ad = ADAPTERS[name]
+    rng = random.Random(seed)
+    a, b, c = random_reachable_states(ad, rng, n_ops=10)
+    u = a.join(b).join(c)  # some upper bound of a and b
+    assert a.join(b).leq(u)
