@@ -10,6 +10,11 @@ Three claims, one table each:
 Sizes are structural atom counts (the paper's Õ ignores log factors in
 ints/ids). ``ClassicMVRegister`` (per-value version vectors) is implemented
 here as the comparison baseline the paper argues against.
+
+``protocol_bytes_table`` additionally carries the shipping-policy axis:
+the delta protocol runs under ship-all and under BP+RR (unified
+propagation runtime), so the end-to-end table shows classical full-state
+≫ deltas ≫ deltas+BP+RR.
 """
 
 from __future__ import annotations
@@ -21,7 +26,7 @@ from typing import Dict, List, Tuple
 
 from repro.core import (AWORSet, CausalNode, FullStateNode, GCounter,
                         MVRegister, NetConfig, Simulator, converged,
-                        run_to_convergence, structural_size)
+                        make_policy, run_to_convergence, structural_size)
 
 
 # ---------------------------------------------------------------------------
@@ -140,15 +145,18 @@ def protocol_bytes_table() -> List[Tuple[str, float, str]]:
     a grown OR-Set — classical full-state shipping vs Algorithm 2 deltas."""
     rows = []
     for S in (200, 2_000):
-        for proto in ("full-state", "delta"):
+        for proto in ("full-state", "delta", "delta+bp+rr"):
             sim = Simulator(NetConfig(loss=0.1, seed=5))
             ids = [f"n{k}" for k in range(3)]
-            mk = (lambda i: FullStateNode(i, AWORSet.bottom(),
-                                          [j for j in ids if j != i])) \
-                if proto == "full-state" else \
-                (lambda i: CausalNode(i, AWORSet.bottom(),
-                                      [j for j in ids if j != i],
-                                      rng=random.Random(7)))
+            if proto == "full-state":
+                mk = lambda i: FullStateNode(i, AWORSet.bottom(),
+                                             [j for j in ids if j != i])
+            else:
+                policy = (make_policy("bp+rr") if proto == "delta+bp+rr"
+                          else None)
+                mk = lambda i, p=policy: CausalNode(
+                    i, AWORSet.bottom(), [j for j in ids if j != i],
+                    rng=random.Random(7), policy=p)
             nodes = [sim.add_node(mk(i)) for i in ids]
             # pre-grow the set on node 0 then sync everyone
             for k in range(S):
@@ -174,8 +182,7 @@ def protocol_bytes_table() -> List[Tuple[str, float, str]]:
                 sim.run_for(2.0)
             run_to_convergence(sim, nodes, interval=1.0, max_time=30_000)
             dt = (time.perf_counter() - t0) * 1e6
-            payload = sum(v for k, v in sim.stats.bytes_by_kind.items()
-                          if k in ("delta", "state"))
+            payload = sim.stats.payload_atoms()
             rows.append((f"protocol_{proto}_S={S}", payload,
                          f"atoms to propagate 20 updates (wall {dt:.0f}us)"))
     return rows

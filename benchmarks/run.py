@@ -2,21 +2,44 @@
 
 Prints ``name,us_per_call,derived`` CSV:
 
-  bench_message_complexity  §9 tables (counter / OR-Set / MVR, + protocol)
-  bench_antientropy         Algorithm 1 vs Algorithm 2 under loss
+  bench_message_complexity  §9 tables (counter / OR-Set / MVR, + protocol
+                            bytes per shipping policy)
+  bench_antientropy         Algorithm 1 vs Algorithm 2 under loss, plus
+                            bytes-shipped per shipping policy under
+                            loss/dup/partition
   bench_tensor_sync         tensor-lattice delta shipping + join throughput
   bench_kernels             kernel microbenchmarks (CPU proxies)
   bench_roofline            per-(arch × shape × mesh) roofline rows from
                             the dry-run artifacts (run dryrun first)
+
+``--json out.json`` additionally writes a machine-readable artifact
+(name → {us_per_call, derived}) so the perf trajectory is recorded
+per-commit (the CI workflow uploads it as ``BENCH_tier1.json``).
+``--only a,b`` restricts to a subset of suites.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import math
 import sys
 import time
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, metavar="OUT.json",
+                    help="also write results as machine-readable JSON")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names (default: all)")
+    args = ap.parse_args(argv)
+    if args.json:
+        import os
+        out_dir = os.path.dirname(os.path.abspath(args.json))
+        if not os.path.isdir(out_dir):
+            ap.error(f"--json: directory {out_dir} does not exist")
+
     from . import (bench_antientropy, bench_kernels,
                    bench_message_complexity, bench_roofline,
                    bench_tensor_sync)
@@ -28,7 +51,16 @@ def main() -> None:
         ("kernels", bench_kernels),
         ("roofline", bench_roofline),
     ]
+    if args.only:
+        keep = {s.strip() for s in args.only.split(",")}
+        unknown = keep - {n for n, _ in modules}
+        if unknown:
+            raise SystemExit(f"unknown suites {sorted(unknown)}; "
+                             f"have {[n for n, _ in modules]}")
+        modules = [(n, m) for n, m in modules if n in keep]
+
     print("name,us_per_call,derived")
+    results = {}
     failures = 0
     for name, mod in modules:
         t0 = time.perf_counter()
@@ -37,11 +69,23 @@ def main() -> None:
         except Exception as e:  # report, keep going
             failures += 1
             print(f"{name}_FAILED,nan,{type(e).__name__}: {e}")
+            results[f"{name}_FAILED"] = {
+                "us_per_call": None, "derived": f"{type(e).__name__}: {e}"}
             continue
         for row_name, us, derived in rows:
             print(f"{row_name},{us:.1f},{derived}")
+            results[row_name] = {
+                "us_per_call": None if math.isnan(us) else us,
+                "derived": derived,
+            }
         dt = time.perf_counter() - t0
         print(f"# {name} done in {dt:.1f}s", file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"suites": [n for n, _ in modules],
+                       "failures": failures,
+                       "results": results}, f, indent=1, allow_nan=False)
+        print(f"# wrote {args.json} ({len(results)} rows)", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

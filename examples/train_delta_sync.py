@@ -115,6 +115,9 @@ def main() -> None:
         seq, batch, lr, seed = 64, 4, 1e-3, 0
         steps, local_steps, pods = 9, 3, 3
         net_loss, topk = 0.2, None
+        # BP+RR: never echo a delta to its origin, never re-ship acked
+        # state — same converged params, fewer gossip bytes
+        ship_policy = "bp+rr"
     run_delta(A)
 
 

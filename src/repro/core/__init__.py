@@ -8,8 +8,15 @@ Layers:
                       Figs. 3a/3b, MVRegister Fig. 4, + the library types
                       the paper lists: GSet, 2PSet, PN, LWW, RWORSet,
                       flags, ORMap).
-* ``antientropy``   — Algorithms 1 (basic) and 2 (causal delta-intervals),
-                      plus the classical full-state baseline.
+* ``propagation``   — the unified delta-propagation runtime: one
+                      ``Replica`` engine (send/receive/ack/GC) behind both
+                      algorithms, parameterized by pluggable
+                      ``ShippingPolicy`` objects (ship-all, state-every-k,
+                      avoid-back-propagation, remove-redundant,
+                      digest-budgeted chunk selection).
+* ``antientropy``   — Algorithms 1 (basic) and 2 (causal delta-intervals)
+                      as thin wrappers over the runtime, plus the
+                      classical full-state baseline.
 * ``sim``           — the §2 network model as a discrete-event simulator
                       (loss, duplication, reordering, partitions,
                       crash/recovery with durable state).
@@ -22,6 +29,10 @@ from .dots import CausalContext, Dot, DotFun, DotMap, DotSet, causal_join
 from .crdts import (ALL_CRDT_TYPES, AWORSet, AWORSetTombstone, DWFlag,
                     DeltaCRDT, EWFlag, GCounter, GSet, LWWRegister, LWWSet,
                     MVRegister, ORMap, PNCounter, RWORSet, TwoPSet)
+from .propagation import (AvoidBackPropagation, Compose, DeltaEntry,
+                          DigestBudget, POLICY_SPECS, RemoveRedundant,
+                          Replica, ShipAll, ShipStateEveryK, ShippingPolicy,
+                          causal_policy_spec, make_policy, stable_seed)
 from .antientropy import (BasicNode, CausalNode, FullStateNode, converged,
                           run_to_convergence)
 from .sim import NetConfig, NetStats, Node, Simulator, structural_size
@@ -31,6 +42,10 @@ __all__ = [
     "ALL_CRDT_TYPES", "AWORSet", "AWORSetTombstone", "DWFlag", "DeltaCRDT",
     "EWFlag", "GCounter", "GSet", "LWWRegister", "LWWSet", "MVRegister",
     "ORMap", "PNCounter", "RWORSet", "TwoPSet",
+    "AvoidBackPropagation", "Compose", "DeltaEntry", "DigestBudget",
+    "POLICY_SPECS", "RemoveRedundant", "Replica", "ShipAll",
+    "ShipStateEveryK", "ShippingPolicy", "causal_policy_spec",
+    "make_policy", "stable_seed",
     "BasicNode", "CausalNode", "FullStateNode", "converged",
     "run_to_convergence",
     "NetConfig", "NetStats", "Node", "Simulator", "structural_size",

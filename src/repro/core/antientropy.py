@@ -1,21 +1,30 @@
 """Anti-entropy algorithms for δ-CRDTs (paper Algorithms 1 and 2).
 
-``BasicNode`` implements Algorithm 1 — convergence only (Prop. 1): deltas are
-accumulated in a volatile delta-group ``D`` and periodically broadcast to
-neighbours; received payloads are joined into ``X`` (and into ``D`` too when
-in *transitive* mode). ``choose`` decides between shipping the delta-group or
-the full state (the paper leaves the policy open; we provide a
-ship-state-every-k policy so convergence holds under message loss, since
-Algorithm 1 clears ``D`` after a send even if the message is dropped).
+Both algorithms are thin configurations of the unified propagation runtime
+(:mod:`repro.core.propagation`): one :class:`~repro.core.propagation.Replica`
+engine owns the send/receive/ack/GC machinery and a pluggable
+:class:`~repro.core.propagation.ShippingPolicy` decides *what* ships each
+round (the paper's open ``chooseᵢ(Xᵢ, Dᵢ)``).
 
-``CausalNode`` implements Algorithm 2 — causal consistency: every delta
-joined into ``X`` is recorded in the sequence ``D`` under an increasing
-counter ``c`` (durable, like ``X``); a sender only ships *delta-intervals*
-Δᵢᵃ'ᵇ starting at the receiver's acknowledged index, which establishes the
-causal delta-merging condition (Def. 6) — see Props. 2 & 3. Old deltas are
+``BasicNode`` is Algorithm 1 — convergence only (Prop. 1): deltas accumulate
+in a volatile delta-group ``D`` and are periodically broadcast to
+neighbours; received payloads join into ``X`` (and into ``D`` too when in
+*transitive* mode). The default policy is ``ShipStateEveryK`` when
+``ship_state_every`` is set (so convergence holds under message loss, since
+Algorithm 1 clears ``D`` after a send even if the message is dropped) and
+``ShipAll`` otherwise.
+
+``CausalNode`` is Algorithm 2 — causal consistency: every delta joined into
+``X`` is recorded in the sequence ``D`` under an increasing counter ``c``
+(durable, like ``X``); a sender only ships *delta-intervals* Δᵢᵃ'ᵇ starting
+at the receiver's acknowledged index, which establishes the causal
+delta-merging condition (Def. 6) — see Props. 2 & 3. Old deltas are
 garbage-collected once acknowledged by all neighbours; a receiver that is
-too far behind (or the sender lost its volatile state in a crash) gets the
-full state instead.
+too far behind (or a sender that lost volatile state in a crash) gets the
+full state instead. Pass ``policy=`` (e.g. ``AvoidBackPropagation``,
+``RemoveRedundant``, or a ``Compose`` of both) to change what enters each
+delta-interval; every policy preserves the merging condition (see the
+propagation module docstring).
 
 Both classes are datatype-generic: they operate on any value implementing
 ``join``/``leq`` (every datatype in ``repro.core.crdts`` and the tensor
@@ -25,170 +34,62 @@ For verifying Prop. 2 operationally, messages optionally carry a *ghost*
 copy of the sender's full state at send time: the proof's simulation
 argument says joining Δⱼᵃ'ᵇ must produce exactly the state that joining the
 full Xⱼᵇ would. ``ghost_check=True`` asserts that equality at every
-delivery.
+delivery — under every shipping policy.
 """
 
 from __future__ import annotations
 
 import random
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Optional, Sequence
 
+from .propagation import (Replica, ShipAll, ShippingPolicy,
+                          ShipStateEveryK)
 from .sim import Node, Simulator
 
 
-class BasicNode(Node):
+class BasicNode(Replica):
     """Algorithm 1: basic anti-entropy (convergence, no causal guarantees)."""
 
     def __init__(self, node_id: str, bottom: Any, neighbors: Sequence[str],
                  transitive: bool = True,
-                 ship_state_every: Optional[int] = None):
-        super().__init__(node_id)
-        self.bottom = bottom
-        self.X = bottom                 # durable state
-        self.D = bottom                 # volatile delta-group
-        self.neighbors = list(neighbors)
-        self.transitive = transitive
+                 ship_state_every: Optional[int] = None,
+                 policy: Optional[ShippingPolicy] = None):
+        if policy is None:
+            policy = (ShipStateEveryK(ship_state_every)
+                      if ship_state_every else ShipAll())
+        super().__init__(node_id, bottom, neighbors, causal=False,
+                         policy=policy, transitive=transitive, fanout=None)
         self.ship_state_every = ship_state_every
-        self._round = 0
 
-    # -- paper: on operationᵢ(mᵟ) ------------------------------------------------
-    def operation(self, m_delta: Callable[[Any], Any]) -> Any:
-        d = m_delta(self.X)
-        self.X = self.X.join(d)
-        self.D = self.D.join(d)
-        return d
-
-    # -- paper: chooseᵢ(Xᵢ, Dᵢ) -----------------------------------------------
+    # -- paper: chooseᵢ(Xᵢ, Dᵢ), kept for the paper correspondence -------------
     def choose(self) -> Any:
-        self._round += 1
-        if self.ship_state_every and self._round % self.ship_state_every == 0:
-            return self.X
-        if self.D == self.bottom:
-            return self.X
-        return self.D
+        """What the next broadcast would carry (to a generic neighbour).
 
-    # -- paper: periodically -------------------------------------------------
-    def on_periodic(self) -> None:
-        if not self.alive:
-            return
-        m = self.choose()
-        for j in self.neighbors:
-            self.send(j, ("delta", m))
-        self.D = self.bottom
-
-    # -- paper: on receiveⱼ,ᵢ(d) ---------------------------------------------
-    def on_receive(self, src: str, msg: Any) -> None:
-        _, d = msg
-        self.X = self.X.join(d)
-        if self.transitive:
-            self.D = self.D.join(d)
-
-    # -- crash model: X durable, D volatile -----------------------------------
-    def durable_snapshot(self) -> Any:
-        return self.X
-
-    def recover(self, durable: Any) -> None:
-        self.X = durable
-        self.D = self.bottom
+        Peeks at the round counter the engine will use: ``on_periodic``
+        increments ``rounds`` before shipping.
+        """
+        rounds = self.rounds
+        try:
+            self.rounds += 1
+            if self.policy.want_full_state(self, "") or not self.entries:
+                return self.X
+            return self.D
+        finally:
+            self.rounds = rounds
 
 
-class CausalNode(Node):
+class CausalNode(Replica):
     """Algorithm 2: delta-interval anti-entropy with the causal
     delta-merging condition."""
 
     def __init__(self, node_id: str, bottom: Any, neighbors: Sequence[str],
                  rng: Optional[random.Random] = None,
                  ghost_check: bool = False,
-                 fanout: int = 1):
-        super().__init__(node_id)
-        self.bottom = bottom
-        # durable state
-        self.X = bottom
-        self.c = 0
-        # volatile state
-        self.D: Dict[int, Any] = {}
-        self.A: Dict[str, int] = {}
-        self.neighbors = list(neighbors)
-        self.rng = rng or random.Random(hash(node_id) & 0xFFFF)
-        self.ghost_check = ghost_check
-        self.fanout = fanout
-        self.ghost_failures: List[str] = []
-
-    # -- paper: on operationᵢ(mᵟ) -----------------------------------------------
-    def operation(self, m_delta: Callable[[Any], Any]) -> Any:
-        d = m_delta(self.X)
-        self.X = self.X.join(d)
-        self.D[self.c] = d
-        self.c += 1
-        return d
-
-    # -- paper: on receiveⱼ,ᵢ(delta, d, n) ------------------------------------
-    def _receive_delta(self, src: str, d: Any, n: int,
-                       ghost: Any = None) -> None:
-        if not d.leq(self.X):
-            if self.ghost_check and ghost is not None:
-                got = self.X.join(d)
-                want = self.X.join(ghost)
-                if got != want:
-                    self.ghost_failures.append(
-                        f"{src}->{self.id} delta-interval join != full-state join")
-            self.X = self.X.join(d)
-            self.D[self.c] = d
-            self.c += 1
-        self.send(src, ("ack", n))
-
-    # -- paper: on receiveⱼ,ᵢ(ack, n) ------------------------------------------
-    def _receive_ack(self, src: str, n: int) -> None:
-        self.A[src] = max(self.A.get(src, 0), n)
-
-    def on_receive(self, src: str, msg: Any) -> None:
-        kind = msg[0]
-        if kind == "delta":
-            _, d, n, ghost = msg
-            self._receive_delta(src, d, n, ghost)
-        elif kind == "ack":
-            self._receive_ack(src, msg[1])
-        else:  # pragma: no cover
-            raise ValueError(f"unknown message kind {kind!r}")
-
-    # -- paper: periodically (ship delta-interval or state) -----------------------
-    def on_periodic(self) -> None:
-        if not self.alive or not self.neighbors:
-            return
-        targets = self.rng.sample(self.neighbors,
-                                  k=min(self.fanout, len(self.neighbors)))
-        for j in targets:
-            self._ship_to(j)
-
-    def _ship_to(self, j: str) -> None:
-        aj = self.A.get(j, 0)
-        if not self.D or min(self.D.keys()) > aj:
-            d = self.X                      # full-state fallback
-        else:
-            d = self.bottom
-            for l in range(aj, self.c):
-                if l in self.D:
-                    d = d.join(self.D[l])
-        if aj < self.c:
-            ghost = self.X if self.ghost_check else None
-            self.send(j, ("delta", d, self.c, ghost))
-
-    # -- paper: periodically (garbage collect deltas) ------------------------------
-    def gc_deltas(self) -> None:
-        # min over *all* neighbours; absent ⇒ 0 (nothing GC-able yet).
-        if not self.D:
-            return
-        l = min(self.A.get(j, 0) for j in self.neighbors)
-        self.D = {n: d for n, d in self.D.items() if n >= l}
-
-    # -- crash model: (X, c) durable; (D, A) volatile ----------------------------
-    def durable_snapshot(self) -> Any:
-        return (self.X, self.c)
-
-    def recover(self, durable: Any) -> None:
-        self.X, self.c = durable
-        self.D = {}
-        self.A = {}
+                 fanout: int = 1,
+                 policy: Optional[ShippingPolicy] = None):
+        super().__init__(node_id, bottom, neighbors, causal=True,
+                         policy=policy, rng=rng, ghost_check=ghost_check,
+                         fanout=fanout)
 
 
 # ---------------------------------------------------------------------------
@@ -242,7 +143,7 @@ def run_to_convergence(sim: Simulator, nodes: Sequence[Node],
             continue  # idempotent: don't double-schedule on repeated calls
         scheduled.add(n.id)
         sim.every(interval, n.on_periodic)
-        if gc and isinstance(n, CausalNode):
+        if gc and isinstance(n, Replica) and n.causal:
             sim.every(interval * 7, n.gc_deltas)
     sim._ae_scheduled = scheduled
     step = interval * 2

@@ -86,6 +86,11 @@ class GCounter(DeltaCRDT):
     def join(self, other: "GCounter") -> "GCounter":
         return GCounter(_map_max(self.entries, other.entries))
 
+    def decompose(self):
+        """Join-irreducible atoms (one per map entry) — lets the
+        RemoveRedundant shipping policy trim payloads part-wise."""
+        return [GCounter(((i, n),)) for i, n in self.entries]
+
 
 @dataclass(frozen=True)
 class PNCounter(DeltaCRDT):
@@ -115,6 +120,10 @@ class PNCounter(DeltaCRDT):
 
     def join(self, other: "PNCounter") -> "PNCounter":
         return PNCounter(self.pos.join(other.pos), self.neg.join(other.neg))
+
+    def decompose(self):
+        return ([PNCounter(pos=a) for a in self.pos.decompose()]
+                + [PNCounter(neg=a) for a in self.neg.decompose()])
 
 
 # ---------------------------------------------------------------------------

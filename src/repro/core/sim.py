@@ -72,6 +72,13 @@ class NetStats:
         self.by_kind[kind] = self.by_kind.get(kind, 0) + 1
         self.bytes_by_kind[kind] = self.bytes_by_kind.get(kind, 0) + size
 
+    def payload_atoms(self) -> int:
+        """Structural size of all CRDT payload traffic (delta + state
+        messages; acks and other control traffic excluded) — the quantity
+        the §9 tables and the shipping-policy benchmarks compare."""
+        return sum(v for k, v in self.bytes_by_kind.items()
+                   if k in ("delta", "state"))
+
 
 class Node:
     """Base replica. Subclasses define durable/volatile state and handlers."""

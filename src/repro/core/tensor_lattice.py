@@ -227,6 +227,72 @@ class TensorState:
         return self.join(self.write_delta(rank, name, new_values, chunk_idx,
                                           chunk_size))
 
+    def decompose(self) -> list:
+        """Per-tensor atoms (coarse join-decomposition) — lets the
+        RemoveRedundant shipping policy drop tensors the receiver provably
+        holds. Chunk-level trimming stays in ``pack_delta`` /
+        ``digest_select`` (dense masks there, not one value per chunk)."""
+        return [TensorState.of({name: ct}, lamport=self.lamport)
+                for name, ct in self.chunks]
+
+
+# -- digest-driven chunk selection --------------------------------------------
+
+def digest_select(state: TensorState, budget_bytes: int,
+                  interpret: bool = True) -> TensorState:
+    """Keep only the top-magnitude chunks of ``state`` under a byte budget.
+
+    Per tensor, ``kernels.ops.chunk_digest`` computes (max|x|, Σx²) per
+    chunk in one pass over HBM; chunks are ranked globally by Σx² (energy)
+    and greedily taken until ``budget_bytes`` of chunk payload is spent.
+    Unselected chunks drop to ⊥ (version 0, zero values), so the result is
+    still ≤ ``state`` in the lattice order and joining it is always safe —
+    this is the ``DigestBudget`` shipping policy's payload transform.
+
+    Chunks already at ⊥ never count against the budget. If everything fits
+    the input is returned unchanged.
+    """
+    from ..kernels.ops import chunk_digest
+
+    candidates = []   # (neg_energy, name, chunk_idx, chunk_bytes)
+    tensors = state.as_dict()
+    for name, ct in tensors.items():
+        vers = np.asarray(ct.versions)
+        live = vers > 0
+        if not live.any():
+            continue
+        _, sumsq = chunk_digest(ct.values, interpret=interpret)
+        sumsq = np.asarray(sumsq)
+        per_chunk = (ct.values.dtype.itemsize * ct.values.shape[1]
+                     + np.dtype(np.int64).itemsize + np.dtype(np.int32).itemsize)
+        for i in np.nonzero(live)[0]:
+            candidates.append((-float(sumsq[i]), name, int(i), per_chunk))
+
+    total = sum(c[3] for c in candidates)
+    if total <= budget_bytes:
+        return state
+
+    keep: Dict[str, list] = {}
+    spent = 0
+    for neg_e, name, i, nbytes in sorted(candidates):
+        if spent + nbytes > budget_bytes:
+            continue
+        spent += nbytes
+        keep.setdefault(name, []).append(i)
+
+    out: Dict[str, ChunkedTensor] = {}
+    for name, ct in tensors.items():
+        idx = keep.get(name)
+        if not idx:
+            continue
+        mask = np.zeros((ct.values.shape[0],), dtype=bool)
+        mask[np.asarray(idx)] = True
+        m = jnp.asarray(mask)
+        vals = jnp.where(m[:, None], ct.values, jnp.zeros_like(ct.values))
+        vers = jnp.where(m, ct.versions, jnp.zeros_like(ct.versions))
+        out[name] = ChunkedTensor(vals, vers)
+    return TensorState.of(out, lamport=state.lamport)
+
 
 # -- wire format --------------------------------------------------------------
 
@@ -322,6 +388,11 @@ class DotSumStore:
             merged[dot] = upd
         return DotSumStore(tuple(sorted(merged.items(),
                                         key=lambda kv: kv[0])))
+
+    def decompose(self) -> list:
+        """One atom per dot — RemoveRedundant trims re-gossiped dots the
+        receiver has already acked."""
+        return [DotSumStore((entry,)) for entry in self.dots]
 
     def leq(self, other: "DotSumStore") -> bool:
         od = other.as_dict()

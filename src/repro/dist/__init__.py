@@ -1,0 +1,23 @@
+"""Distribution layer: sharding assignment, HLO collective accounting,
+roofline arithmetic.
+
+Tier-0 of the two-tier distribution story (DESIGN.md §2): *inside* a pod,
+synchronous SPMD over a jax mesh — this package maps logical parameter
+axes to mesh axes (``shardings``), audits the collectives the partitioner
+actually emitted (``hlo``), and turns compiled cost analyses into
+per-chip roofline terms (``roofline``). Tier-1 — *across* pods — is the
+δ-CRDT propagation runtime in ``repro.core`` / ``repro.sync``.
+"""
+
+from .hlo import collective_bytes, collective_count, cross_pod_bytes
+from .roofline import (HBM_BW, ICI_BW, PEAK_FLOPS, RooflineReport,
+                       roofline)
+from .shardings import (MeshRules, batch_pspecs, make_rules, named,
+                        param_pspecs, spec_for)
+
+__all__ = [
+    "collective_bytes", "collective_count", "cross_pod_bytes",
+    "HBM_BW", "ICI_BW", "PEAK_FLOPS", "RooflineReport", "roofline",
+    "MeshRules", "batch_pspecs", "make_rules", "named", "param_pspecs",
+    "spec_for",
+]

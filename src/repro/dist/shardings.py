@@ -1,0 +1,139 @@
+"""Logical-axis → mesh-axis assignment with divisibility fallbacks.
+
+Models annotate every parameter dimension with a *logical* name
+("embed", "mlp", "heads", "kv", "vocab", "expert", "lora", …; see
+``repro.models.layers``). ``MeshRules`` maps each name to an ordered list
+of candidate mesh-axis tuples; ``spec_for`` greedily assigns, per tensor:
+
+* dims are visited left-to-right; each mesh axis is used at most once per
+  tensor;
+* a candidate is taken only when the dim size is divisible by the product
+  of the candidate's mesh-axis sizes (GSPMD would otherwise pad);
+* when no candidate fits, the dim replicates and the miss is recorded in
+  ``rules.fallbacks`` (surfaced in the dry-run artifacts).
+
+``make_rules`` builds the production rule table for a mesh (FSDP embed
+over the batch axes; tensor-parallel model axis for vocab/mlp/heads/kv/
+expert; MLA latents replicated). ``serve=True`` empties the FSDP
+candidates so parameters replicate over the batch axes at inference (used
+when the model-sharded copy fits per chip — see launch.dryrun).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass
+class MeshRules:
+    mesh: Any                                     # needs .shape mapping
+    batch_axes: Tuple[str, ...]
+    candidates: Dict[str, List[Tuple[str, ...]]]
+    fallbacks: List[str] = field(default_factory=list)
+
+
+def _axes_size(mesh, axes: Sequence[str]) -> int:
+    size = 1
+    for a in axes:
+        size *= int(mesh.shape[a])
+    return size
+
+
+def spec_for(shape: Sequence[int], logical: Sequence[Optional[str]],
+             rules: MeshRules) -> P:
+    """Greedy one-axis-per-tensor assignment for one parameter."""
+    used: set = set()
+    entries: List[Any] = []
+    for dim, name in zip(shape, logical):
+        cands = rules.candidates.get(name, []) if name else []
+        assigned: Optional[Tuple[str, ...]] = None
+        missed = False
+        for cand in cands:
+            axes = tuple(cand)
+            if any(a in used for a in axes):
+                continue             # axis already carries another dim
+            if dim % _axes_size(rules.mesh, axes) != 0:
+                missed = True        # GSPMD would pad — try the next
+                continue
+            assigned = axes
+            break
+        if assigned is None:
+            if missed:
+                rules.fallbacks.append(
+                    f"{name}{tuple(shape)}: dim {dim} not divisible — "
+                    f"replicated")
+            entries.append(None)
+            continue
+        if missed:
+            rules.fallbacks.append(
+                f"{name}{tuple(shape)}: dim {dim} fell back to "
+                f"{assigned}")
+        used.update(assigned)
+        entries.append(assigned[0] if len(assigned) == 1 else assigned)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def make_rules(mesh, serve: bool = False) -> MeshRules:
+    """The production rule table for ``mesh`` (axes: [pod,] data, model)."""
+    multi_pod = "pod" in mesh.shape
+    batch = ("pod", "data") if multi_pod else ("data",)
+    fsdp: List[Tuple[str, ...]] = [] if serve else (
+        [("pod", "data"), ("data",)] if multi_pod else [("data",)])
+    return MeshRules(
+        mesh=mesh,
+        batch_axes=batch,
+        candidates={
+            "vocab": [("model",)],
+            "embed": fsdp,
+            "mlp": [("model",)],
+            "heads": [("model",)],
+            "kv": [("model",)],
+            "expert": [("model",)],
+            "lora": [],
+            "layers": [],
+        },
+    )
+
+
+def param_pspecs(params: Any, logical: Any, rules: MeshRules) -> Any:
+    """PartitionSpec tree for a parameter tree + its logical-name tree."""
+
+    def one(p, names):
+        shape = tuple(p.shape)
+        names = tuple(names) if names is not None else ()
+        if len(names) < len(shape):
+            names = names + (None,) * (len(shape) - len(names))
+        return spec_for(shape, names[:len(shape)], rules)
+
+    return jax.tree_util.tree_map(one, params, logical)
+
+
+def batch_pspecs(batch: Any, rules: MeshRules) -> Any:
+    """Shard the leading (batch) dim of every input leaf over the batch
+    axes; anything not divisible (or scalar) replicates."""
+    total = _axes_size(rules.mesh, rules.batch_axes)
+    ax = (rules.batch_axes[0] if len(rules.batch_axes) == 1
+          else tuple(rules.batch_axes))
+
+    def one(x):
+        shape = tuple(getattr(x, "shape", ()))
+        if not shape or shape[0] % total != 0:
+            return P()
+        return P(ax)
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+def named(pspecs: Any, mesh) -> Any:
+    """Wrap a PartitionSpec tree in NamedShardings on ``mesh``."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -19,9 +19,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
-from repro.core import (AWORSet, CausalNode, MVRegister, NetConfig, ORMap,
-                        Simulator, converged, run_to_convergence)
+from repro.core import (AWORSet, MVRegister, NetConfig, ORMap, POLICY_SPECS,
+                        Replica, Simulator, causal_policy_spec, converged,
+                        make_policy, run_to_convergence)
 from repro.models import decode_step, init_model, prefill
+
+
+def _policy_spec(s: str) -> str:
+    try:                 # fail at arg parsing, not after the model ran
+        return causal_policy_spec(s, "the session-table gossip")
+    except ValueError as e:
+        raise argparse.ArgumentTypeError(str(e))
 
 
 def main() -> None:
@@ -33,6 +41,9 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--replicate", type=int, default=0,
                     help="N gateway replicas for the δ-CRDT session table")
+    ap.add_argument("--ship-policy", default="bp+rr", type=_policy_spec,
+                    help="shipping policy for --replicate gossip "
+                         f"(e.g. {', '.join(POLICY_SPECS)})")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
@@ -98,12 +109,14 @@ def main() -> None:
 
 
 def _replicated_sessions(args, b: int) -> None:
-    """Session table as ORMap(request → LWW status) across gateways."""
+    """Session table as ORMap(request → LWW status) across gateways,
+    gossiped by the unified propagation runtime under --ship-policy."""
     sim = Simulator(NetConfig(loss=0.25, dup=0.1, seed=args.seed))
     ids = [f"gw{k}" for k in range(args.replicate)]
-    nodes = [sim.add_node(CausalNode(i, ORMap.bottom(),
-                                     [j for j in ids if j != i],
-                                     rng=random.Random(args.seed + k)))
+    nodes = [sim.add_node(Replica(i, ORMap.bottom(),
+                                  [j for j in ids if j != i], causal=True,
+                                  policy=make_policy(args.ship_policy),
+                                  rng=random.Random(args.seed + k)))
              for k, i in enumerate(ids)]
     for r in range(b):
         gw = nodes[r % len(nodes)]   # each request owned by one gateway →
@@ -117,8 +130,10 @@ def _replicated_sessions(args, b: int) -> None:
     table = nodes[0].X
     statuses = {k: next(iter(table.get_value(k, MVRegister).read()))
                 for k in sorted(table.keys())}
+    payload = sim.stats.payload_atoms()
     print(f"  [δ-CRDT] session table replicated over {args.replicate} "
-          f"gateways (25% loss): {statuses}")
+          f"gateways (25% loss, policy={args.ship_policy}, "
+          f"payload_atoms={payload}): {statuses}")
     assert all(v == "done" for v in statuses.values())
 
 

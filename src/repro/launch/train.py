@@ -31,7 +31,9 @@ import numpy as np
 from repro.checkpoint import (DeltaCheckpointStore, pytree_from_state,
                               state_from_pytree)
 from repro.configs import ARCH_IDS, get_config
-from repro.core import NetConfig, Simulator, converged, run_to_convergence
+from repro.core import (NetConfig, POLICY_SPECS, Simulator,
+                        causal_policy_spec, converged, make_policy,
+                        run_to_convergence)
 from repro.data import SyntheticLMStream
 from repro.models import init_model, train_loss
 from repro.optim import AdamWConfig
@@ -119,11 +121,13 @@ def run_delta(args) -> None:
 
     sim = Simulator(NetConfig(loss=args.net_loss, dup=0.1, seed=args.seed))
     ids = [f"pod{k}" for k in range(args.pods)]
+    policy_spec = getattr(args, "ship_policy", "all")
     pods = [sim.add_node(DeltaSyncPod(
         i, [j for j in ids if j != i], init_params, local_update,
         num_pods=args.pods,
         compressor=(TopKCompressor(args.topk) if args.topk else None),
-        rng=random.Random(args.seed + n)))
+        rng=random.Random(args.seed + n),
+        policy=make_policy(policy_spec)))
         for n, i in enumerate(ids)]
 
     rounds = max(1, args.steps // args.local_steps)
@@ -133,8 +137,10 @@ def run_delta(args) -> None:
         sim.run_for(5.0)  # anti-entropy gossip between rounds
     run_to_convergence(sim, pods, interval=1.0, max_time=50_000)
     assert converged(pods), "pods failed to converge"
+    payload = sim.stats.payload_atoms()
     print(f"[done] {rounds} rounds × {args.local_steps} local steps on "
-          f"{args.pods} pods over a lossy network (loss={args.net_loss}); "
+          f"{args.pods} pods over a lossy network (loss={args.net_loss}, "
+          f"ship-policy={policy_spec}, payload_atoms={payload}); "
           f"all pods converged to identical outer params "
           f"({len(pods[0].X.dots)} dots merged)")
 
@@ -162,6 +168,15 @@ def main() -> None:
     ap.add_argument("--net-loss", type=float, default=0.2)
     ap.add_argument("--topk", type=float, default=None,
                     help="top-k compression rate (e.g. 0.1)")
+    def _policy_spec(s):
+        try:             # fail at arg parsing, not after N training steps
+            return causal_policy_spec(s, "delta-mode gossip")
+        except ValueError as e:
+            raise argparse.ArgumentTypeError(str(e))
+
+    ap.add_argument("--ship-policy", default="all", type=_policy_spec,
+                    help="delta-mode gossip shipping policy "
+                         f"(e.g. {', '.join(POLICY_SPECS)})")
     args = ap.parse_args()
     if args.mode == "sync":
         run_sync(args)

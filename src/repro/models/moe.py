@@ -45,6 +45,14 @@ try:  # jax >= 0.6 moved shard_map around
 except ImportError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map as _shard_map
 
+import inspect as _inspect
+
+# jax >= 0.6 renamed the replication-check kwarg check_rep → check_vma;
+# accept either runtime.
+_SHARD_MAP_CHECK_KW = (
+    "check_vma" if "check_vma" in _inspect.signature(_shard_map).parameters
+    else "check_rep")
+
 from jax.sharding import PartitionSpec as P
 
 
@@ -280,7 +288,8 @@ def _apply_moe_local(p: Dict, cfg, x: jax.Array, ctx
                 (wi_spec if "wg" in p else None), wo_spec)
     out_specs = (P(dp if len(dp) > 1 else dp[0], None, None), P())
     y, aux = _shard_map(local_fn, mesh=mesh, in_specs=in_specs,
-                        out_specs=out_specs, check_vma=False)(
+                        out_specs=out_specs,
+                        **{_SHARD_MAP_CHECK_KW: False})(
         x, p["router"], p["wi"], p.get("wg"), p["wo"])
 
     if m.num_shared_experts:

@@ -13,17 +13,20 @@ slow, lossy, partition-prone and membership is elastic — replication is
 * ``compression``   — top-k magnitude sparsification with error feedback
                       (the delta payloads for dense models).
 * ``membership``    — elastic worker membership: AWORSet of workers +
-                      monotone heartbeats; straggler detection/eviction.
+                      monotone heartbeats; straggler detection/eviction;
+                      ``ClusterReplica`` gossips the view through the
+                      unified propagation runtime (pluggable policies).
 * ``metrics``       — duplicate-safe distributed metrics (per-replica
                       monotone entries; PN counters).
 """
 
 from .compression import TopKCompressor, sparse_nbytes
 from .localsgd import DeltaSyncPod, OuterParams
-from .membership import ClusterState, Membership
+from .membership import ClusterReplica, ClusterState, Membership
 from .metrics import Metrics, MetricsState
 
 __all__ = [
     "TopKCompressor", "sparse_nbytes", "DeltaSyncPod", "OuterParams",
-    "ClusterState", "Membership", "Metrics", "MetricsState",
+    "ClusterReplica", "ClusterState", "Membership", "Metrics",
+    "MetricsState",
 ]

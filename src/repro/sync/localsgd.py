@@ -13,9 +13,13 @@ delivered — regardless of loss, duplication, or reordering, and without any
 exactly-once machinery. Optionally payloads are top-k+error-feedback
 compressed (``TopKCompressor``); the dot then carries the sparse update.
 
-``DeltaSyncPod`` subclasses the generic ``CausalNode``: the CRDT state IS
-the dot store. The §7.2-compressed execution (``IntervalSum`` — O(1) memory
-instead of the full dot cloud) is property-tested equivalent in
+``DeltaSyncPod`` runs on the unified propagation runtime
+(``repro.core.propagation.Replica`` in causal mode): the CRDT state IS the
+dot store, and the ``policy=`` knob selects what each gossip round ships —
+``ShipAll`` (default), ``AvoidBackPropagation`` / ``RemoveRedundant`` (or
+their ``Compose``) to cut redundant bytes on dense topologies. The
+§7.2-compressed execution (``IntervalSum`` — O(1) memory instead of the
+full dot cloud) is property-tested equivalent in
 tests/test_tensor_lattice.py and used by the example driver for large
 models.
 """
@@ -29,7 +33,7 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from ..core.antientropy import CausalNode
+from ..core.propagation import Replica, ShippingPolicy
 from ..core.tensor_lattice import DotSumStore, IntervalSum
 from .compression import TopKCompressor
 
@@ -59,11 +63,13 @@ class OuterParams:
             self.init, running_sum)
 
 
-class DeltaSyncPod(CausalNode):
+class DeltaSyncPod(Replica):
     """A pod replica: local training + δ-CRDT gossip of round updates.
 
     ``local_update_fn(params, round_idx, pod_id) -> new_params`` is the
     K-local-steps inner loop (supplied by the example driver / tests).
+    ``policy`` is any :class:`~repro.core.propagation.ShippingPolicy`
+    (default ship-all, Algorithm 2 semantics preserved).
     """
 
     def __init__(self, pod_id: str, neighbors, init_params: Any,
@@ -71,9 +77,11 @@ class DeltaSyncPod(CausalNode):
                  num_pods: int,
                  compressor: Optional[TopKCompressor] = None,
                  rng: Optional[random.Random] = None,
-                 ghost_check: bool = False):
-        super().__init__(pod_id, DotSumStore.bottom(), neighbors, rng=rng,
-                         ghost_check=ghost_check)
+                 ghost_check: bool = False,
+                 policy: Optional[ShippingPolicy] = None):
+        super().__init__(pod_id, DotSumStore.bottom(), neighbors,
+                         causal=True, policy=policy, rng=rng,
+                         ghost_check=ghost_check, fanout=1)
         self.outer = OuterParams(init=init_params, scale=1.0 / num_pods)
         self.local_update_fn = local_update_fn
         self.compressor = compressor

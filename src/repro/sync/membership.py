@@ -18,11 +18,13 @@ and a late pod's dots still merge idempotently when they eventually arrive.
 
 from __future__ import annotations
 
+import random
 from dataclasses import dataclass, field
-from typing import Dict, FrozenSet, Optional, Tuple
+from typing import Dict, FrozenSet, Optional, Sequence, Tuple
 
 from ..core.crdts import AWORSet, DeltaCRDT, LWWSet
 from ..core.dots import ReplicaId
+from ..core.propagation import Replica, ShippingPolicy
 
 
 @dataclass(frozen=True)
@@ -108,14 +110,18 @@ class Membership:
     def heartbeat(self, state: ClusterState, now: float) -> ClusterState:
         return state.beat_delta(self.self_id, now)
 
+    def stale(self, state: ClusterState, now: float) -> FrozenSet[ReplicaId]:
+        """Workers (other than self) silent for ≥ evict_after."""
+        return frozenset(
+            w for w in state.workers()
+            if w != self.self_id
+            and now - state.heartbeats.last_seen(w) >= self.evict_after)
+
     def evictions(self, state: ClusterState, now: float) -> ClusterState:
         """Delta that removes every worker silent for ≥ evict_after."""
         delta = ClusterState.bottom()
-        for w in state.workers():
-            if w == self.self_id:
-                continue
-            if now - state.heartbeats.last_seen(w) >= self.evict_after:
-                delta = delta.join(state.leave_delta(self.self_id, w))
+        for w in self.stale(state, now):
+            delta = delta.join(state.leave_delta(self.self_id, w))
         return delta
 
     def quorum(self, state: ClusterState, now: float,
@@ -125,3 +131,43 @@ class Membership:
         alive = state.alive(now, self.timeout)
         need = max(1, int(len(state.workers()) * fraction))
         return alive if len(alive) >= need else frozenset()
+
+
+class ClusterReplica(Replica):
+    """One pod's cluster-view replica on the unified propagation runtime:
+    the :class:`Membership` agent's delta-mutations gossip through the same
+    ``Replica`` engine (Algorithm 2 + pluggable shipping policy) as every
+    other lattice. On a full mesh, ``AvoidBackPropagation`` +
+    ``RemoveRedundant`` keep heartbeat chatter from echoing back to its
+    producer or re-shipping state the receiver already acked."""
+
+    def __init__(self, node_id: ReplicaId, neighbors: Sequence[ReplicaId],
+                 *, policy: Optional[ShippingPolicy] = None,
+                 rng: Optional[random.Random] = None,
+                 timeout: float = 30.0, evict_after: float = 90.0):
+        super().__init__(node_id, ClusterState.bottom(), neighbors,
+                         causal=True, policy=policy, rng=rng)
+        self.agent = Membership(node_id, timeout=timeout,
+                                evict_after=evict_after)
+
+    # -- delta-mutations through the engine -----------------------------------
+    def announce(self, now: float) -> None:
+        self.operation(lambda X: self.agent.announce(X, now))
+
+    def heartbeat(self, now: float) -> None:
+        self.operation(lambda X: self.agent.heartbeat(X, now))
+
+    def evict_stragglers(self, now: float) -> FrozenSet[ReplicaId]:
+        """Record an eviction delta for every worker silent ≥ evict_after;
+        returns the set evicted by this call."""
+        doomed = self.agent.stale(self.X, now)
+        if doomed:
+            self.operation(lambda X: self.agent.evictions(X, now))
+        return doomed
+
+    # -- queries over the replicated view --------------------------------------
+    def alive_workers(self, now: float) -> FrozenSet[ReplicaId]:
+        return self.X.alive(now, self.agent.timeout)
+
+    def quorum(self, now: float, fraction: float = 0.5) -> FrozenSet[ReplicaId]:
+        return self.agent.quorum(self.X, now, fraction)

@@ -5,6 +5,9 @@ and direct modes, with the ship-full-state-every-k policy covering loss."""
 import random
 
 import pytest
+import pytest as _pytest
+_pytest.importorskip(
+    "hypothesis", reason="dev dependency — pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from crdt_adapters import ADAPTERS, random_reachable_states

@@ -7,6 +7,9 @@ state), delta GC, and crash/recovery with durable (X, c)."""
 import random
 
 import pytest
+import pytest as _pytest
+_pytest.importorskip(
+    "hypothesis", reason="dev dependency — pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from crdt_adapters import ADAPTERS, random_reachable_states

@@ -5,6 +5,9 @@ consistent (gap-free) histories."""
 
 import random
 
+import pytest as _pytest
+_pytest.importorskip(
+    "hypothesis", reason="dev dependency — pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import CausalContext

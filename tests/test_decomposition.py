@@ -9,6 +9,9 @@ standard mutator would ship."""
 import random
 
 import pytest
+import pytest as _pytest
+_pytest.importorskip(
+    "hypothesis", reason="dev dependency — pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from crdt_adapters import ADAPTERS, REPLICAS, random_reachable_states

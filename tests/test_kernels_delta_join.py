@@ -6,6 +6,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+import pytest as _pytest
+_pytest.importorskip(
+    "hypothesis", reason="dev dependency — pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops

@@ -4,6 +4,9 @@ be commutative, associative, and idempotent; mutators are inflations)."""
 import random
 
 import pytest
+import pytest as _pytest
+_pytest.importorskip(
+    "hypothesis", reason="dev dependency — pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from crdt_adapters import ADAPTERS, REPLICAS, random_reachable_states

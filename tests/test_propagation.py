@@ -1,0 +1,264 @@
+"""Unified propagation runtime: policy semantics, wrapper compatibility,
+and the BP/RR byte-reduction invariants (deterministic; the hypothesis
+property sweep lives in test_propagation_properties.py)."""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (AWORSet, AvoidBackPropagation, BasicNode, CausalNode,
+                        Compose, DigestBudget, GCounter, NetConfig,
+                        POLICY_SPECS, RemoveRedundant, Replica, ShipAll,
+                        ShipStateEveryK, Simulator, converged, make_policy,
+                        run_to_convergence, stable_seed, structural_size)
+
+
+class _CaptureSim:
+    """Duck-typed stand-in for Simulator: records sends, no delivery."""
+
+    def __init__(self):
+        self.sent = []
+
+    def send(self, src, dst, msg):
+        self.sent.append((src, dst, msg))
+
+
+def _deltas_to(cap, dst):
+    return [m for s, d, m in cap.sent if d == dst and m[0] == "delta"]
+
+
+# ---------------------------------------------------------------------------
+# make_policy / composition
+# ---------------------------------------------------------------------------
+
+def test_make_policy_parses_atoms_and_compositions():
+    assert isinstance(make_policy("all"), ShipAll)
+    assert isinstance(make_policy("bp"), AvoidBackPropagation)
+    assert isinstance(make_policy("rr"), RemoveRedundant)
+    assert make_policy("every:7").k == 7
+    assert make_policy("digest:4096").budget_bytes == 4096
+    combo = make_policy("bp+rr")
+    assert isinstance(combo, Compose)
+    assert combo.requires_known_state
+    with pytest.raises(ValueError):
+        make_policy("nope")
+
+
+def test_stable_seed_is_process_independent():
+    # crc32, not salted hash(): the exact value is part of the contract
+    import zlib
+    assert stable_seed("pod7") == zlib.crc32(b"pod7") & 0xFFFF
+    assert stable_seed("pod7") == stable_seed("pod7")
+    assert stable_seed("pod7") != stable_seed("pod8")
+
+
+# ---------------------------------------------------------------------------
+# BP: never echo a delta to its origin
+# ---------------------------------------------------------------------------
+
+def test_bp_filters_origin_but_still_ships_bottom_for_acks():
+    cap = _CaptureSim()
+    r = CausalNode("a", GCounter.bottom(), ["b", "c"],
+                   policy=AvoidBackPropagation())
+    r.attach(cap)
+    # a delta arrives from b and is buffered with origin=b
+    r.on_receive("b", ("delta", GCounter((("b", 1),)), 1, None))
+    assert r.entries[0].origin == "b"
+    cap.sent.clear()
+    r._ship_to("c")              # c never saw it: full payload
+    (msg,) = _deltas_to(cap, "c")
+    assert msg[1].value() == 1
+    r._ship_to("b")              # back to origin: ⊥ payload, ack still moves
+    (msg,) = _deltas_to(cap, "b")
+    assert msg[1] == GCounter.bottom()
+    assert msg[2] == r.c         # tagged so b's ack advances the horizon
+
+
+def test_bp_basic_mode_skips_origin_entirely():
+    cap = _CaptureSim()
+    r = BasicNode("a", GCounter.bottom(), ["b", "c"],
+                  policy=AvoidBackPropagation())
+    r.attach(cap)
+    r.on_receive("b", ("delta", GCounter((("b", 1),))))
+    r.on_periodic()
+    assert _deltas_to(cap, "c")          # forwarded onward
+    assert not _deltas_to(cap, "b")      # no ack machinery ⇒ no send at all
+
+
+# ---------------------------------------------------------------------------
+# RR: part-wise trimming against the ack-derived known state
+# ---------------------------------------------------------------------------
+
+def test_rr_trims_atoms_the_receiver_acked():
+    cap = _CaptureSim()
+    r = CausalNode("a", GCounter.bottom(), ["b"], policy=RemoveRedundant())
+    r.attach(cap)
+    r.operation(lambda X: X.inc_delta("a"))
+    r._ship_to("b")
+    r.on_receive("b", ("ack", r.c))          # b now provably holds {a:1}
+    assert r.known_state("b") == GCounter((("a", 1),))
+    # a redundant-in-part delta arrives: {a:1} ⊔ {z:1}
+    r.on_receive("z", ("delta", GCounter((("a", 1), ("z", 1))), 5, None))
+    cap.sent.clear()
+    r._ship_to("b")
+    (msg,) = _deltas_to(cap, "b")
+    # the {a:1} part was trimmed; only the fresh atom ships
+    assert msg[1] == GCounter((("z", 1),))
+
+
+def test_rr_known_state_credits_full_state_fallback():
+    cap = _CaptureSim()
+    r = CausalNode("a", GCounter.bottom(), ["b"], policy=RemoveRedundant())
+    r.attach(cap)
+    for _ in range(5):
+        r.operation(lambda X: X.inc_delta("a"))
+    r.gc_deltas()
+    r.entries.clear()                        # simulate GC'd-past horizon
+    r._ship_to("b")                          # ⇒ full-state fallback
+    (msg,) = _deltas_to(cap, "b")
+    assert msg[1] == r.X
+    r.on_receive("b", ("ack", msg[2]))
+    # the ack credited the *payload*, not just (empty) buffered entries
+    assert r.known_state("b") == r.X
+
+
+# ---------------------------------------------------------------------------
+# Every policy converges to the same state; BP/RR bytes ≤ ship-all
+# ---------------------------------------------------------------------------
+
+def _run_policy(spec, bottom_fn, op, loss=0.25, dup=0.15, n_ops=40,
+                crash=False):
+    sim = Simulator(NetConfig(loss=loss, dup=dup, seed=9))
+    ids = [f"n{k}" for k in range(4)]
+    nodes = [sim.add_node(CausalNode(
+        i, bottom_fn(), [j for j in ids if j != i],
+        rng=random.Random(13), ghost_check=True,
+        policy=make_policy(spec))) for i in ids]
+    rng = random.Random(17)
+    for k in range(n_ops):
+        n = rng.choice(nodes)
+        if n.alive:
+            op(n, rng)
+        sim.run_for(0.4)
+        if crash and k == n_ops // 2:
+            sim.crash(ids[0], downtime=4.0)
+    run_to_convergence(sim, nodes, interval=1.0, max_time=60_000)
+    assert converged(nodes)
+    fails = [f for n in nodes for f in n.ghost_failures]
+    assert not fails, fails
+    bytes_shipped = sim.stats.payload_atoms()
+    return nodes[0].X, bytes_shipped
+
+
+@pytest.mark.parametrize("crash", [False, True])
+def test_policies_converge_identically_and_bp_rr_never_ship_more(crash):
+    def inc(n, rng):
+        n.operation(lambda X, i=n.id: X.inc_delta(i))
+
+    results = {spec: _run_policy(spec, GCounter.bottom, inc, crash=crash)
+               for spec in POLICY_SPECS}
+    states = [x for x, _ in results.values()]
+    assert all(s == states[0] for s in states[1:])
+    base = results["all"][1]
+    assert results["bp"][1] <= base
+    assert results["rr"][1] <= base
+    assert results["bp+rr"][1] <= base
+    assert results["bp+rr"][1] < base     # strict on this topology
+
+
+def test_policies_converge_on_orset_workload():
+    def addrm(n, rng):
+        if rng.random() < 0.7:
+            n.operation(lambda X, i=n.id: X.add_delta(i, rng.choice("xyz")))
+        else:
+            n.operation(lambda X, i=n.id: X.rmv_delta(i, rng.choice("xyz")))
+
+    results = {spec: _run_policy(spec, AWORSet.bottom, addrm)
+               for spec in ("all", "bp", "bp+rr")}
+    states = [x for x, _ in results.values()]
+    assert all(s == states[0] for s in states[1:])
+    assert results["bp+rr"][1] <= results["all"][1]
+
+
+# ---------------------------------------------------------------------------
+# DigestBudget: basic-mode only, budget respected
+# ---------------------------------------------------------------------------
+
+def test_digest_budget_rejected_in_causal_mode():
+    with pytest.raises(ValueError):
+        CausalNode("a", GCounter.bottom(), ["b"],
+                   policy=DigestBudget(1024))
+    with pytest.raises(ValueError):
+        Replica("a", GCounter.bottom(), ["b"], causal=True,
+                policy=make_policy("digest:1024+every:5"))
+
+
+def test_digest_budget_converges_with_periodic_full_state():
+    from repro.core.tensor_lattice import TensorState
+
+    sim = Simulator(NetConfig(loss=0.0, dup=0.0, seed=3))
+    ids = ["n0", "n1"]
+    chunk = 8
+    budget = 2 * (chunk * 4 + 8 + 4)     # two f32 chunks + version + index
+    nodes = [sim.add_node(BasicNode(
+        i, TensorState.bottom(), [j for j in ids if j != i],
+        policy=make_policy(f"digest:{budget}+every:4"))) for i in ids]
+    rng = np.random.default_rng(0)
+    for k in range(6):
+        vals = rng.normal(size=(32,)).astype(np.float32)
+        nodes[0].operation(lambda X, v=vals: X.write_delta(
+            0, "w", v, chunk_size=chunk))
+        sim.run_for(2.0)
+    run_to_convergence(sim, nodes, interval=1.0, max_time=10_000)
+    assert converged(nodes)
+
+
+def test_digest_budget_caps_payload_size():
+    from repro.core.tensor_lattice import TensorState, digest_select
+
+    s = TensorState.bottom().write_delta(
+        0, "w", np.arange(64, dtype=np.float32), chunk_size=8)
+    per_chunk = 8 * 4 + 8 + 4
+    sel = digest_select(s, budget_bytes=3 * per_chunk)
+    live = np.asarray(sel.as_dict()["w"].versions) > 0
+    assert live.sum() == 3
+    assert set(np.nonzero(live)[0]) == {5, 6, 7}   # top energy chunks
+    assert sel.leq(s)
+    assert s.join(sel) == s                        # never invents state
+
+
+# ---------------------------------------------------------------------------
+# Wrapper compatibility with the paper-facing API
+# ---------------------------------------------------------------------------
+
+def test_basic_node_delta_group_view_and_recovery():
+    r = BasicNode("a", GCounter.bottom(), ["b"], ship_state_every=3)
+    r.operation(lambda X: X.inc_delta("a"))
+    assert r.D == GCounter((("a", 1),))
+    r.crash_and_recover()
+    assert r.X.value() == 1                   # durable
+    assert r.D == GCounter.bottom()           # volatile
+
+def test_causal_node_interval_view_and_recovery():
+    r = CausalNode("a", GCounter.bottom(), ["b"])
+    r.operation(lambda X: X.inc_delta("a"))
+    r.operation(lambda X: X.inc_delta("a"))
+    assert set(r.D) == {0, 1} and r.c == 2
+    r.A["b"] = 1
+    r.crash_and_recover()
+    assert (r.X.value(), r.c) == (2, 2)       # durable (X, c)
+    assert r.D == {} and r.A == {}            # volatile
+
+
+def test_ship_state_every_k_in_causal_mode_forces_full_state():
+    cap = _CaptureSim()
+    r = CausalNode("a", GCounter.bottom(), ["b"],
+                   policy=ShipStateEveryK(1))
+    r.attach(cap)
+    r.operation(lambda X: X.inc_delta("a"))
+    r.on_receive("b", ("delta", GCounter((("b", 4),)), 1, None))
+    r.rounds = 1
+    r._ship_to("b")
+    (msg,) = _deltas_to(cap, "b")
+    assert msg[1] == r.X                      # full X, not the interval

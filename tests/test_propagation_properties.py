@@ -1,0 +1,126 @@
+"""Property tests (hypothesis) for the shipping-policy layer:
+
+* every ShippingPolicy preserves convergence under loss / duplication /
+  reordering, on every datatype adapter, with the Prop. 2 ghost-check on;
+* AvoidBackPropagation / RemoveRedundant ship monotonically ≤ ShipAll's
+  structural bytes on the identical seeded execution;
+* RemoveRedundant never ships an atom the receiver provably covers
+  (checked at every send against the sender's ack-derived known state);
+* decompose() is a faithful join-decomposition where implemented.
+"""
+
+import random
+
+import pytest
+import pytest as _pytest
+_pytest.importorskip(
+    "hypothesis", reason="dev dependency — pip install -r requirements-dev.txt")
+from hypothesis import given, settings, strategies as st
+
+from crdt_adapters import ADAPTERS, random_reachable_states
+from repro.core import (CausalNode, GCounter, NetConfig, POLICY_SPECS,
+                        Simulator, converged, make_policy,
+                        run_to_convergence)
+
+POLICY_ADAPTERS = ["gcounter", "pncounter", "aworset", "ormap", "mvreg"]
+
+
+def _drive(spec, name, seed, n_nodes=3, n_ops=15):
+    ad = ADAPTERS[name]
+    rng = random.Random(seed)
+    sim = Simulator(NetConfig(loss=0.25, dup=0.15, seed=seed))
+    ids = [f"n{k}" for k in range(n_nodes)]
+    nodes = [sim.add_node(CausalNode(
+        i, ad.bottom, [j for j in ids if j != i],
+        rng=random.Random(seed + 1), ghost_check=True,
+        policy=make_policy(spec))) for i in ids]
+    for _ in range(n_ops):
+        n = rng.choice(nodes)
+        op = rng.choice(ad.ops)
+        args = op.make_args(rng)
+        n.operation(lambda X, i=n.id, op=op, args=args:
+                    op.delta(X, i, *args))
+        if rng.random() < 0.5:
+            sim.run_for(0.5)
+    run_to_convergence(sim, nodes, interval=1.0, max_time=60_000)
+    assert converged(nodes)
+    fails = [f for n in nodes for f in n.ghost_failures]
+    assert not fails, fails
+    payload = sim.stats.payload_atoms()
+    return nodes[0].X, payload
+
+
+@pytest.mark.parametrize("spec", POLICY_SPECS)
+@pytest.mark.parametrize("name", POLICY_ADAPTERS)
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_every_policy_converges_under_loss_dup_reorder(spec, name, seed):
+    _drive(spec, name, seed)
+
+
+@pytest.mark.parametrize("name", ["gcounter", "aworset"])
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_bp_rr_bytes_monotonically_below_ship_all(name, seed):
+    """Same seeded execution ⇒ same converged state; filtering policies
+    never ship more structural bytes than the ship-all baseline."""
+    base_state, base_bytes = _drive("all", name, seed)
+    for spec in ("bp", "rr", "bp+rr"):
+        state, payload = _drive(spec, name, seed)
+        assert state == base_state
+        assert payload <= base_bytes, (
+            f"{spec} shipped {payload} > ship-all {base_bytes}")
+
+
+class _AuditedSim(Simulator):
+    """Asserts, at every delta send, that no shipped atom is provably
+    already covered by the receiver (the RR guarantee)."""
+
+    def send(self, src, dst, msg):
+        if isinstance(msg, tuple) and msg and msg[0] == "delta":
+            node = self.nodes.get(src)
+            payload = msg[1]
+            known = node.known_state(dst) if node is not None else None
+            atoms = getattr(payload, "decompose", None)
+            if known is not None and atoms is not None:
+                for a in atoms():
+                    assert not a.leq(known), (
+                        f"{src}->{dst}: shipped atom {a!r} already covered")
+        super().send(src, dst, msg)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_rr_never_ships_a_covered_atom(seed):
+    rng = random.Random(seed)
+    sim = _AuditedSim(NetConfig(loss=0.2, dup=0.1, seed=seed))
+    ids = [f"n{k}" for k in range(3)]
+    nodes = [sim.add_node(CausalNode(
+        i, GCounter.bottom(), [j for j in ids if j != i],
+        rng=random.Random(seed + 1), policy=make_policy("bp+rr")))
+        for i in ids]
+    for k in range(20):
+        n = rng.choice(nodes)
+        if n.alive:
+            n.operation(lambda X, i=n.id: X.inc_delta(i))
+        sim.run_for(0.5)
+        if k == 10:
+            sim.crash(ids[0], downtime=3.0)   # forces fallback re-gossip
+    run_to_convergence(sim, nodes, interval=1.0, max_time=60_000)
+    assert converged(nodes)
+
+
+@pytest.mark.parametrize("name", ["gcounter", "pncounter"])
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_decompose_is_a_faithful_join_decomposition(name, seed):
+    """⊔ decompose(X) == X, and every atom is ≤ X."""
+    ad = ADAPTERS[name]
+    rng = random.Random(seed)
+    X = rng.choice(random_reachable_states(ad, rng, n_ops=10))
+    atoms = X.decompose()
+    rejoined = ad.bottom
+    for a in atoms:
+        assert a.leq(X)
+        rejoined = rejoined.join(a)
+    assert rejoined == X
