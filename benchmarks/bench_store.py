@@ -1,0 +1,149 @@
+"""Keyed LatticeStore benchmarks: batched join throughput + sharded bytes.
+
+Two claims measured (and asserted — regressions fail the suite):
+
+1. **objects/sec joined**: joining a store of N independent ``TensorState``
+   objects against a same-shaped delta store, via the batched
+   ``kernels.delta_join`` path (chunks from all N objects stacked into one
+   launch) vs the per-key Python loop (one ``TensorState.join`` — one jit
+   dispatch — per key). At N ≥ 1024 the batched path must be ≥ 5× faster:
+   the loop pays per-object dispatch overhead, the batch pays it once.
+
+2. **bytes shipped per anti-entropy round scale with *touched* keys, not
+   store size** (under ``bp+rr``): a 3-replica causal mesh converges on a
+   pre-populated store, then a workload touches T of the S keys; the
+   phase-2 payload is ~flat in S for fixed T and grows with T.
+"""
+
+from __future__ import annotations
+
+import random
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+
+def _mk_tensor_store(n_obj: int, n_tensors: int, n_chunks: int, chunk: int,
+                     seed: int, version: int):
+    """A store of N ``TensorState`` objects (each holding ``n_tensors``
+    chunked tensors) with host-resident (numpy) chunk data — what wire
+    ingestion and previous batched joins produce on the CPU path."""
+    from repro.core import LatticeStore
+    from repro.core.tensor_lattice import ChunkedTensor, TensorState
+    rng = np.random.default_rng(seed)
+    out = {}
+    for i in range(n_obj):
+        ts = {f"t{t}": ChunkedTensor(
+                  rng.normal(size=(n_chunks, chunk)).astype(np.float32),
+                  np.full((n_chunks,), version, dtype=np.int32))
+              for t in range(n_tensors)}
+        out[f"obj{i:05d}"] = TensorState.of(ts)
+    return LatticeStore.of(out)
+
+
+def _block(store) -> None:
+    for _, ts in store.entries:
+        for _, ct in ts.chunks:
+            for arr in (ct.values, ct.versions):
+                ready = getattr(arr, "block_until_ready", None)
+                if ready is not None:
+                    ready()
+
+
+def _time_join(a, b, batched: bool, repeats: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = a.join(b, batched=batched)
+        _block(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def batched_join_rows(n_obj: int = 1024, n_tensors: int = 4,
+                      n_chunks: int = 2,
+                      chunk: int = 128) -> List[Tuple[str, float, str]]:
+    a = _mk_tensor_store(n_obj, n_tensors, n_chunks, chunk, seed=0,
+                         version=1)
+    b = _mk_tensor_store(n_obj, n_tensors, n_chunks, chunk, seed=1,
+                         version=2)
+    _block(a.join(b, batched=False))   # warm the per-key dispatch cache
+    _block(a.join(b, batched=True))    # warm launch + columnar caches
+
+    t_loop = _time_join(a, b, batched=False)
+    t_batched = _time_join(a, b, batched=True)
+    speedup = t_loop / t_batched
+    assert speedup >= 5.0, (
+        f"batched store join only {speedup:.1f}x faster than the per-key "
+        f"loop at {n_obj} objects (claim: ≥5x)")
+    return [
+        (f"store_join_loop_{n_obj}", t_loop * 1e6,
+         f"objs_per_s={n_obj / t_loop:.0f}"),
+        (f"store_join_batched_{n_obj}", t_batched * 1e6,
+         f"objs_per_s={n_obj / t_batched:.0f};speedup={speedup:.1f}x"),
+    ]
+
+
+def _phase2_bytes(store_size: int, touched: int, seed: int = 5) -> int:
+    """Payload atoms shipped while propagating ops on ``touched`` of the
+    ``store_size`` keys, after the store has already converged."""
+    from repro.core import (GCounter, NetConfig, Simulator, StoreReplica,
+                            converged, make_policy, run_to_convergence)
+    sim = Simulator(NetConfig(loss=0.05, dup=0.05, seed=seed))
+    ids = [f"n{k}" for k in range(3)]
+    nodes = [sim.add_node(StoreReplica(
+        i, [j for j in ids if j != i], causal=True,
+        policy=make_policy("bp+rr"), rng=random.Random(seed + 1)))
+        for i in ids]
+    rng = random.Random(seed + 2)
+    for s in range(store_size):
+        n = nodes[s % len(nodes)]
+        n.update(f"k{s:04d}", GCounter, "inc_delta", n.id)
+        if s % 16 == 15:
+            sim.run_for(0.3)
+    run_to_convergence(sim, nodes, interval=1.0, max_time=120_000)
+    base = sim.stats.payload_atoms()
+    for t in range(touched):
+        n = rng.choice(nodes)
+        n.update(f"k{t % store_size:04d}", GCounter, "inc_delta", n.id)
+        sim.run_for(0.3)
+    run_to_convergence(sim, nodes, interval=1.0, max_time=120_000)
+    assert converged(nodes)
+    return sim.stats.payload_atoms() - base
+
+
+def sharded_bytes_rows() -> List[Tuple[str, float, str]]:
+    rows = []
+    # fixed touched-key count, growing store: bytes must stay ~flat
+    fixed_t = {}
+    for size in (64, 512):
+        t0 = time.perf_counter()
+        atoms = _phase2_bytes(size, touched=8)
+        fixed_t[size] = atoms
+        rows.append((f"store_bytes_S{size}_T8",
+                     (time.perf_counter() - t0) * 1e6,
+                     f"payload_atoms={atoms}"))
+    assert fixed_t[512] <= 2.5 * fixed_t[64], (
+        f"bytes grew with store size at fixed touched keys: {fixed_t}")
+    # fixed store, growing touched-key count: bytes must grow
+    by_t = {}
+    for touched in (4, 64):
+        t0 = time.perf_counter()
+        atoms = _phase2_bytes(256, touched=touched)
+        by_t[touched] = atoms
+        rows.append((f"store_bytes_S256_T{touched}",
+                     (time.perf_counter() - t0) * 1e6,
+                     f"payload_atoms={atoms}"))
+    assert by_t[4] < by_t[64], (
+        f"bytes did not grow with touched keys: {by_t}")
+    return rows
+
+
+def run() -> List[Tuple[str, float, str]]:
+    return batched_join_rows() + sharded_bytes_rows()
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

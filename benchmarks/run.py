@@ -9,13 +9,17 @@ Prints ``name,us_per_call,derived`` CSV:
                             loss/dup/partition
   bench_tensor_sync         tensor-lattice delta shipping + join throughput
   bench_kernels             kernel microbenchmarks (CPU proxies)
+  bench_store               keyed LatticeStore: batched vs per-key join
+                            throughput + sharded bytes-per-round scaling
   bench_roofline            per-(arch × shape × mesh) roofline rows from
                             the dry-run artifacts (run dryrun first)
 
-``--json out.json`` additionally writes a machine-readable artifact
-(name → {us_per_call, derived}) so the perf trajectory is recorded
-per-commit (the CI workflow uploads it as ``BENCH_tier1.json``).
-``--only a,b`` restricts to a subset of suites.
+``--json [out.json]`` additionally writes a machine-readable artifact
+(name → {us_per_call, derived}, stamped with the git revision and
+per-suite wall times) so the perf trajectory is recorded per-commit; a
+bare ``--json`` writes ``BENCH_tier1.json`` in the current directory,
+which is the repo root in CI (the workflow uploads it). ``--only a,b``
+restricts to a subset of suites.
 """
 
 from __future__ import annotations
@@ -27,10 +31,25 @@ import sys
 import time
 
 
+def _git_revision() -> str:
+    """The current commit hash (stamps the JSON artifact so per-commit
+    perf trajectories can be reconstructed); 'unknown' outside a repo."""
+    import subprocess
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"],
+                             capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--json", default=None, metavar="OUT.json",
-                    help="also write results as machine-readable JSON")
+    ap.add_argument("--json", nargs="?", const="BENCH_tier1.json",
+                    default=None, metavar="OUT.json",
+                    help="also write results as machine-readable JSON "
+                         "(bare --json writes BENCH_tier1.json in the "
+                         "current directory — the repo root in CI)")
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names (default: all)")
     args = ap.parse_args(argv)
@@ -41,7 +60,7 @@ def main(argv=None) -> None:
             ap.error(f"--json: directory {out_dir} does not exist")
 
     from . import (bench_antientropy, bench_kernels,
-                   bench_message_complexity, bench_roofline,
+                   bench_message_complexity, bench_roofline, bench_store,
                    bench_tensor_sync)
 
     modules = [
@@ -49,6 +68,7 @@ def main(argv=None) -> None:
         ("antientropy", bench_antientropy),
         ("tensor_sync", bench_tensor_sync),
         ("kernels", bench_kernels),
+        ("store", bench_store),
         ("roofline", bench_roofline),
     ]
     if args.only:
@@ -61,7 +81,9 @@ def main(argv=None) -> None:
 
     print("name,us_per_call,derived")
     results = {}
+    suite_wall = {}
     failures = 0
+    run_t0 = time.perf_counter()
     for name, mod in modules:
         t0 = time.perf_counter()
         try:
@@ -79,10 +101,14 @@ def main(argv=None) -> None:
                 "derived": derived,
             }
         dt = time.perf_counter() - t0
+        suite_wall[name] = round(dt, 3)
         print(f"# {name} done in {dt:.1f}s", file=sys.stderr)
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"suites": [n for n, _ in modules],
+            json.dump({"git_revision": _git_revision(),
+                       "wall_time_s": round(time.perf_counter() - run_t0, 3),
+                       "suite_wall_s": suite_wall,
+                       "suites": [n for n, _ in modules],
                        "failures": failures,
                        "results": results}, f, indent=1, allow_nan=False)
         print(f"# wrote {args.json} ({len(results)} rows)", file=sys.stderr)

@@ -29,10 +29,12 @@ from .dots import CausalContext, Dot, DotFun, DotMap, DotSet, causal_join
 from .crdts import (ALL_CRDT_TYPES, AWORSet, AWORSetTombstone, DWFlag,
                     DeltaCRDT, EWFlag, GCounter, GSet, LWWRegister, LWWSet,
                     MVRegister, ORMap, PNCounter, RWORSet, TwoPSet)
+from .store import LatticeStore, digest_select_store
 from .propagation import (AvoidBackPropagation, Compose, DeltaEntry,
                           DigestBudget, POLICY_SPECS, RemoveRedundant,
                           Replica, ShipAll, ShipStateEveryK, ShippingPolicy,
-                          causal_policy_spec, make_policy, stable_seed)
+                          StoreReplica, causal_policy_spec, make_policy,
+                          stable_seed)
 from .antientropy import (BasicNode, CausalNode, FullStateNode, converged,
                           run_to_convergence)
 from .sim import NetConfig, NetStats, Node, Simulator, structural_size
@@ -42,10 +44,11 @@ __all__ = [
     "ALL_CRDT_TYPES", "AWORSet", "AWORSetTombstone", "DWFlag", "DeltaCRDT",
     "EWFlag", "GCounter", "GSet", "LWWRegister", "LWWSet", "MVRegister",
     "ORMap", "PNCounter", "RWORSet", "TwoPSet",
+    "LatticeStore", "digest_select_store",
     "AvoidBackPropagation", "Compose", "DeltaEntry", "DigestBudget",
     "POLICY_SPECS", "RemoveRedundant", "Replica", "ShipAll",
-    "ShipStateEveryK", "ShippingPolicy", "causal_policy_spec",
-    "make_policy", "stable_seed",
+    "ShipStateEveryK", "ShippingPolicy", "StoreReplica",
+    "causal_policy_spec", "make_policy", "stable_seed",
     "BasicNode", "CausalNode", "FullStateNode", "converged",
     "run_to_convergence",
     "NetConfig", "NetStats", "Node", "Simulator", "structural_size",

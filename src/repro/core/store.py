@@ -1,0 +1,421 @@
+"""Keyed δ-CRDT object store: a map of independent lattice objects that is
+itself a join-semilattice.
+
+The paper's anti-entropy algorithms replicate *one* object per replica; a
+serving fleet replicates *millions* (one session table per request, one
+tensor shard per model slice, one membership view…). ``LatticeStore`` lifts
+any family of lattices to a keyed store with the **pointwise** order:
+
+* join  — per key: both sides present ⇒ ``a[k].join(b[k])``; one side ⇒
+          that value (the other side is implicitly at that key's ⊥);
+* ⊥     — the empty store; a key bound to its own type's bottom is
+          indistinguishable from an absent key (``leq``/``==`` treat them
+          identically), so deltas stay sparse;
+* δ     — a store containing only the touched keys, each holding a delta
+          of the embedded type. Joining single-key deltas yields multi-key
+          store deltas, which is how per-key delta-intervals aggregate
+          into one store-level wire message in the propagation engine.
+
+This is a semilattice because the product of semilattices under the
+pointwise order is one; heterogeneous value types are fine as long as each
+*key* keeps one type across its lifetime (joining a GCounter into an
+AWORSet at the same key is a type error, exactly as it would be without
+the store).
+
+The join has a **batched fast path**: when both sides hold
+``tensor_lattice.TensorState`` values under many keys, the per-chunk LWW
+merges are stacked into one ``kernels.delta_join`` Pallas launch
+(``kernels.ops.batched_delta_join``) instead of one jit dispatch per key —
+the objects/sec win measured by ``benchmarks/bench_store.py``. The
+per-key Python loop remains as the fallback (``batched=False``, or
+automatically for keys whose tensors cannot be stacked).
+
+Replica integration lives in :mod:`repro.core.propagation`: ``Replica``'s
+durable state is a ``LatticeStore`` (single-object replicas are one-key
+stores behind a view property), and ``StoreReplica`` exposes the keyed
+API. Hash-sharded key ownership is :mod:`repro.sync.membership`
+(``KeyOwnership`` / ``ShardByKey``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, FrozenSet, Iterable, List, Mapping, Tuple
+
+
+def _is_bottom(value: Any) -> bool:
+    """A value equal to its own type's bottom is lattice-identity."""
+    return value == type(value).bottom()
+
+
+@dataclass(frozen=True, eq=False)
+class LatticeStore:
+    """key → lattice value, itself a join-semilattice (pointwise order)."""
+
+    entries: Tuple[Tuple[str, Any], ...] = ()
+
+    # -- construction -----------------------------------------------------------
+    @staticmethod
+    def bottom() -> "LatticeStore":
+        return LatticeStore()
+
+    @staticmethod
+    def of(mapping: Mapping[str, Any]) -> "LatticeStore":
+        return LatticeStore(tuple(sorted(mapping.items())))
+
+    @staticmethod
+    def key_delta(key: str, delta_value: Any) -> "LatticeStore":
+        """δ-mutator lift: a store delta touching exactly one key."""
+        return LatticeStore(((key, delta_value),))
+
+    # -- views ------------------------------------------------------------------
+    def as_dict(self) -> Dict[str, Any]:
+        return dict(self.entries)
+
+    def keys(self) -> FrozenSet[str]:
+        return frozenset(k for k, _ in self.entries)
+
+    def get(self, key: str, typ=None):
+        """Value at ``key``; ``typ.bottom()`` (or None) when absent."""
+        val = self.as_dict().get(key)
+        if val is None and typ is not None:
+            return typ.bottom()
+        return val
+
+    def restrict(self, keys: Iterable[str]) -> "LatticeStore":
+        """Sub-store of the given keys (the ownership-sharding projection).
+        Always ≤ self, so joining a restriction is always safe."""
+        keep = set(keys)
+        return LatticeStore(tuple((k, v) for k, v in self.entries
+                                  if k in keep))
+
+    # -- δ-mutator lift ----------------------------------------------------------
+    def apply_delta(self, key: str, typ, mutator_name: str,
+                    *args) -> "LatticeStore":
+        """Lift a δ-mutator of the embedded type at ``key``: the returned
+        store delta contains only that key. Mirrors ``ORMap.apply_delta``
+        (args include the replica id when the mutator wants one)."""
+        cur = self.get(key, typ)
+        sub_delta = getattr(cur, mutator_name)(*args)
+        return LatticeStore.key_delta(key, sub_delta)
+
+    def update_delta(self, key: str, typ,
+                     fn: Callable[[Any], Any]) -> "LatticeStore":
+        """Like ``apply_delta`` with a free-form mutator function."""
+        return LatticeStore.key_delta(key, fn(self.get(key, typ)))
+
+    # -- lattice ----------------------------------------------------------------
+    def join(self, other: "LatticeStore", *,
+             batched: bool = True) -> "LatticeStore":
+        if batched:
+            fast = _stacked_fast_join(self, other)
+            if fast is not None:
+                return fast
+        a, b = self.as_dict(), other.as_dict()
+        out: Dict[str, Any] = {}
+        pending: List[Tuple[str, Any, Any]] = []
+        for k in set(a) | set(b):
+            if k not in a:
+                out[k] = b[k]
+            elif k not in b:
+                out[k] = a[k]
+            elif batched and _both_tensorstates(a[k], b[k]):
+                pending.append((k, a[k], b[k]))
+            else:
+                out[k] = a[k].join(b[k])
+        if pending:
+            out.update(_batched_join_tensorstates(pending))
+        return LatticeStore.of(out)
+
+    def leq(self, other: "LatticeStore") -> bool:
+        b = other.as_dict()
+        for k, v in self.entries:
+            if k in b:
+                if not v.leq(b[k]):
+                    return False
+            elif not _is_bottom(v):
+                return False
+        return True
+
+    def __eq__(self, other: object) -> bool:
+        if not isinstance(other, LatticeStore):
+            return NotImplemented
+        a, b = self.as_dict(), other.as_dict()
+        for k in set(a) | set(b):
+            if k not in a or k not in b:
+                # absent key ≡ that key's ⊥
+                if not _is_bottom(a.get(k, b.get(k))):
+                    return False
+            elif a[k] != b[k]:
+                return False
+        return True
+
+    def __hash__(self):  # pragma: no cover
+        raise TypeError("unhashable")
+
+    def decompose(self) -> list:
+        """Join-decomposition: per key, the embedded value's atoms (when it
+        decomposes) each wrapped as a single-key store; else one atom per
+        key. Lets RemoveRedundant trim store payloads key-by-key (and
+        finer, where the value supports it)."""
+        atoms = []
+        for k, v in self.entries:
+            sub = getattr(v, "decompose", None)
+            if sub is None:
+                atoms.append(LatticeStore.key_delta(k, v))
+            else:
+                atoms.extend(LatticeStore.key_delta(k, a) for a in sub())
+        return atoms
+
+    def __repr__(self) -> str:
+        inner = ", ".join(f"{k}: {type(v).__name__}" for k, v in self.entries)
+        return f"LatticeStore({{{inner}}})"
+
+
+# ---------------------------------------------------------------------------
+# Batched TensorState join (one Pallas launch over many keys' chunks)
+# ---------------------------------------------------------------------------
+
+_TS_CLS = None     # cached TensorState class (lazy: tensor_lattice pulls jax)
+
+
+def _tensorstate_cls():
+    global _TS_CLS
+    if _TS_CLS is None:
+        try:
+            from .tensor_lattice import TensorState
+        except Exception:  # pragma: no cover - jax unavailable
+            return None
+        _TS_CLS = TensorState
+    return _TS_CLS
+
+
+def _both_tensorstates(a: Any, b: Any) -> bool:
+    ts = _tensorstate_cls()
+    return ts is not None and isinstance(a, ts) and isinstance(b, ts)
+
+
+def _stackable(act, bct) -> bool:
+    return (act.values.shape == bct.values.shape
+            and act.values.dtype == bct.values.dtype)
+
+
+class _StackedChunks:
+    """Columnar cache of all of a store's TensorState chunk data: one
+    ``[total_rows, chunk]`` values array + ``[total_rows]`` versions,
+    with a ``(key, name, start, stop)`` layout. Built lazily on first
+    batched join and attached to the (immutable) store, so a resident
+    store that joins many deltas pays the stacking glue once; the output
+    of a stacked join carries its own cache (its ChunkedTensors are views
+    into the stacked result), keeping steady-state anti-entropy rounds at
+    one kernel launch + O(keys) view assembly."""
+
+    __slots__ = ("vals", "vers", "layout", "sig")
+
+    def __init__(self, vals, vers, layout, sig):
+        self.vals = vals
+        self.vers = vers
+        self.layout = layout
+        self.sig = sig
+
+
+def _stack_store(store: LatticeStore):
+    """Fetch (or build and cache) the columnar view of ``store``. Returns
+    None when the store is not stackable (non-tensor values, mixed chunk
+    widths/dtypes, or empty)."""
+    import numpy as np
+
+    cached = store.__dict__.get("_stacked_cache")
+    if cached is not None:
+        return cached if isinstance(cached, _StackedChunks) else None
+    ts_cls = _tensorstate_cls()
+    result = None
+    # cheap prescan first so non-tensor stores bail before any array work
+    if (ts_cls is not None and store.entries
+            and all(isinstance(v, ts_cls) for _, v in store.entries)):
+        parts_v, parts_r, layout = [], [], []
+        chunkw = dtype = vdtype = None
+        row = 0
+        ok = True
+        for key, val in store.entries:
+            for name, ct in val.chunks:
+                v, r = np.asarray(ct.values), np.asarray(ct.versions)
+                if chunkw is None:
+                    chunkw, dtype, vdtype = v.shape[1], v.dtype, r.dtype
+                elif (v.shape[1] != chunkw or v.dtype != dtype
+                      or r.dtype != vdtype):
+                    ok = False
+                    break
+                parts_v.append(v)
+                parts_r.append(r)
+                layout.append((key, name, row, row + v.shape[0]))
+                row += v.shape[0]
+            if not ok:
+                break
+        if ok and parts_v:
+            # sig carries the full key sequence too: a key holding an
+            # empty TensorState contributes no layout rows but must still
+            # align between the two stores
+            sig = (tuple(k for k, _ in store.entries),
+                   tuple((k, n, stop - start)
+                         for k, n, start, stop in layout),
+                   chunkw, str(dtype), str(vdtype))
+            result = _StackedChunks(np.concatenate(parts_v),
+                                    np.concatenate(parts_r),
+                                    tuple(layout), sig)
+    object.__setattr__(store, "_stacked_cache",
+                       result if result is not None else False)
+    return result
+
+
+def _stacked_fast_join(a_store: LatticeStore,
+                       b_store: LatticeStore):
+    """Aligned-layout fast path: when both stores stack to the identical
+    (key, name, rows) signature — the steady state of a resident store
+    joining full-coverage deltas — the whole join is ONE kernel launch
+    over the cached columns. Returns None when the layouts differ (the
+    general per-segment path handles subsets and mismatches)."""
+    import numpy as np
+
+    sa = _stack_store(a_store)
+    if sa is None:
+        return None
+    sb = _stack_store(b_store)
+    if sb is None or sa.sig != sb.sig:
+        return None
+    # jax-dependent imports only after stackability is established, so
+    # pure-CRDT stores keep working where jax is unavailable
+    from .tensor_lattice import ChunkedTensor, TensorState
+    from ..kernels import ops
+
+    if ops.use_pallas_default():
+        import jax.numpy as jnp
+        ovn, overn = ops.delta_join(
+            jnp.asarray(sa.vals), jnp.asarray(sa.vers),
+            jnp.asarray(sb.vals), jnp.asarray(sb.vers), interpret=False)
+    else:
+        n = sa.vals.shape[0]
+        ov, over = ops.delta_join(sa.vals, sa.vers, sb.vals, sb.vers,
+                                  block_n=n, interpret=True)
+        ovn, overn = np.asarray(ov), np.asarray(over)
+
+    out_entries = []
+    li = 0
+    layout = sa.layout
+    for (key, A), (_, B) in zip(a_store.entries, b_store.entries):
+        chunks = []
+        for name, _ct in A.chunks:
+            _, _, start, stop = layout[li]
+            li += 1
+            chunks.append((name, ChunkedTensor(ovn[start:stop],
+                                               overn[start:stop])))
+        out_entries.append((key, TensorState(tuple(chunks),
+                                             max(A.lamport, B.lamport))))
+    result = LatticeStore(tuple(out_entries))
+    object.__setattr__(result, "_stacked_cache",
+                       _StackedChunks(ovn, overn, layout, sa.sig))
+    return result
+
+
+def _batched_join_tensorstates(pairs: List[Tuple[str, Any, Any]]
+                               ) -> Dict[str, Any]:
+    """Join many (key, TensorState, TensorState) pairs with the chunk
+    merges of *all* keys stacked into one kernel launch per (chunk-width,
+    dtype) group, instead of one jit dispatch per key. Keys whose tensors
+    cannot be stacked (shape/dtype mismatch) fall back to the per-key
+    join."""
+    from .tensor_lattice import ChunkedTensor, TensorState
+    from ..kernels import ops
+
+    out: Dict[str, Any] = {}
+    segments: List[Tuple[Any, Any, Any, Any]] = []
+    # per key: the merged (name, ChunkedTensor-or-segment-index) plan;
+    # ``TensorState.chunks`` is sorted by name, so a linear sorted-tuple
+    # merge avoids dict/set construction per key on the hot path
+    plans: List[Tuple[str, list, int]] = []    # (key, plan, lamport)
+
+    for key, A, B in pairs:
+        ca, cb = A.chunks, B.chunks
+        ia = ib = 0
+        plan: list = []
+        seg_start = len(segments)
+        ok = True
+        while ia < len(ca) or ib < len(cb):
+            if ib == len(cb) or (ia < len(ca) and ca[ia][0] < cb[ib][0]):
+                plan.append(ca[ia])
+                ia += 1
+            elif ia == len(ca) or cb[ib][0] < ca[ia][0]:
+                plan.append(cb[ib])
+                ib += 1
+            else:                              # same tensor on both sides
+                name, act = ca[ia]
+                bct = cb[ib][1]
+                if not _stackable(act, bct):
+                    ok = False
+                    break
+                plan.append((name, len(segments)))
+                segments.append((act.values, act.versions,
+                                 bct.values, bct.versions))
+                ia += 1
+                ib += 1
+        if not ok:
+            del segments[seg_start:]           # discard this key's segments
+            out[key] = A.join(B)               # per-key fallback
+            continue
+        plans.append((key, plan, max(A.lamport, B.lamport)))
+
+    results: List[Any] = []
+    if segments:
+        if ops.use_pallas_default():
+            # TPU: stay on-device, compiled Mosaic kernel
+            results = ops.batched_delta_join(segments, interpret=False)
+        else:
+            # CPU: host-staged numpy glue + one single-grid-step
+            # interpret launch per signature (outputs are numpy views)
+            results = ops.batched_delta_join(segments, interpret=True,
+                                             host_stage=True)
+
+    for key, plan, lamport in plans:
+        chunks = tuple(
+            (name, ChunkedTensor(*results[v]) if isinstance(v, int) else v)
+            for name, v in plan)
+        out[key] = TensorState(chunks, lamport)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Store-wide digest selection (the DigestBudget policy over keyed stores)
+# ---------------------------------------------------------------------------
+
+def digest_select_store(store: LatticeStore, budget_bytes: int,
+                        interpret: bool = True) -> LatticeStore:
+    """Byte-budgeted chunk selection across the *whole* store: chunks from
+    every ``TensorState`` value under every key enter ONE global energy
+    ranking (``tensor_lattice.digest_keep_plan``, scope = store key) — so
+    the budget picks *keys* by digest, not just chunks within one object.
+    Non-tensor values pass through untouched (they are not
+    chunk-addressable; the policy budgets tensor payload). The result is
+    ≤ ``store`` pointwise, so joining it is always safe."""
+    from .tensor_lattice import (TensorState, digest_keep_plan,
+                                 mask_kept_chunks)
+
+    passthrough: Dict[str, Any] = {}
+    tensor_keys: Dict[str, Any] = {}
+    for key, val in store.as_dict().items():
+        (tensor_keys if isinstance(val, TensorState)
+         else passthrough)[key] = val
+
+    keep = digest_keep_plan(
+        ((key, name, ct) for key, val in tensor_keys.items()
+         for name, ct in val.as_dict().items()), budget_bytes, interpret)
+    if keep is None:
+        return store
+
+    out: Dict[str, Any] = dict(passthrough)
+    for key, val in tensor_keys.items():
+        kept = {name: mask_kept_chunks(ct, keep[(key, name)])
+                for name, ct in val.as_dict().items()
+                if keep.get((key, name))}
+        if kept:
+            out[key] = TensorState.of(kept, lamport=val.lamport)
+    return LatticeStore.of(out)

@@ -238,25 +238,22 @@ class TensorState:
 
 # -- digest-driven chunk selection --------------------------------------------
 
-def digest_select(state: TensorState, budget_bytes: int,
-                  interpret: bool = True) -> TensorState:
-    """Keep only the top-magnitude chunks of ``state`` under a byte budget.
+def digest_keep_plan(tensors, budget_bytes: int, interpret: bool = True):
+    """The shared energy-ranked greedy selection behind ``digest_select``
+    and ``store.digest_select_store``.
 
-    Per tensor, ``kernels.ops.chunk_digest`` computes (max|x|, Σx²) per
-    chunk in one pass over HBM; chunks are ranked globally by Σx² (energy)
-    and greedily taken until ``budget_bytes`` of chunk payload is spent.
-    Unselected chunks drop to ⊥ (version 0, zero values), so the result is
-    still ≤ ``state`` in the lattice order and joining it is always safe —
-    this is the ``DigestBudget`` shipping policy's payload transform.
-
-    Chunks already at ⊥ never count against the budget. If everything fits
-    the input is returned unchanged.
+    ``tensors`` is an iterable of ``(scope, name, ChunkedTensor)`` (scope
+    is the store key, or None for a single object). Per tensor,
+    ``kernels.ops.chunk_digest`` computes (max|x|, Σx²) per chunk in one
+    pass over HBM; live chunks are ranked globally by Σx² (energy) and
+    taken greedily until ``budget_bytes`` of chunk payload is spent.
+    Chunks already at ⊥ never count against the budget. Returns None when
+    everything fits, else ``{(scope, name): [kept chunk indices]}``.
     """
     from ..kernels.ops import chunk_digest
 
-    candidates = []   # (neg_energy, name, chunk_idx, chunk_bytes)
-    tensors = state.as_dict()
-    for name, ct in tensors.items():
+    candidates = []   # (neg_energy, scope, name, chunk_idx, chunk_bytes)
+    for scope, name, ct in tensors:
         vers = np.asarray(ct.versions)
         live = vers > 0
         if not live.any():
@@ -266,31 +263,47 @@ def digest_select(state: TensorState, budget_bytes: int,
         per_chunk = (ct.values.dtype.itemsize * ct.values.shape[1]
                      + np.dtype(np.int64).itemsize + np.dtype(np.int32).itemsize)
         for i in np.nonzero(live)[0]:
-            candidates.append((-float(sumsq[i]), name, int(i), per_chunk))
+            candidates.append((-float(sumsq[i]), scope, name, int(i),
+                               per_chunk))
 
-    total = sum(c[3] for c in candidates)
-    if total <= budget_bytes:
-        return state
+    if sum(c[4] for c in candidates) <= budget_bytes:
+        return None
 
-    keep: Dict[str, list] = {}
+    keep: Dict[Tuple[Any, str], list] = {}
     spent = 0
-    for neg_e, name, i, nbytes in sorted(candidates):
+    for neg_e, scope, name, i, nbytes in sorted(candidates):
         if spent + nbytes > budget_bytes:
             continue
         spent += nbytes
-        keep.setdefault(name, []).append(i)
+        keep.setdefault((scope, name), []).append(i)
+    return keep
 
-    out: Dict[str, ChunkedTensor] = {}
-    for name, ct in tensors.items():
-        idx = keep.get(name)
-        if not idx:
-            continue
-        mask = np.zeros((ct.values.shape[0],), dtype=bool)
-        mask[np.asarray(idx)] = True
-        m = jnp.asarray(mask)
-        vals = jnp.where(m[:, None], ct.values, jnp.zeros_like(ct.values))
-        vers = jnp.where(m, ct.versions, jnp.zeros_like(ct.versions))
-        out[name] = ChunkedTensor(vals, vers)
+
+def mask_kept_chunks(ct: ChunkedTensor, idx) -> ChunkedTensor:
+    """Drop every chunk not in ``idx`` to ⊥ (version 0, zero values), so
+    the result is ≤ the input in the lattice order and always safe to
+    join."""
+    mask = np.zeros((ct.values.shape[0],), dtype=bool)
+    mask[np.asarray(idx)] = True
+    m = jnp.asarray(mask)
+    vals = jnp.where(m[:, None], ct.values, jnp.zeros_like(ct.values))
+    vers = jnp.where(m, ct.versions, jnp.zeros_like(ct.versions))
+    return ChunkedTensor(vals, vers)
+
+
+def digest_select(state: TensorState, budget_bytes: int,
+                  interpret: bool = True) -> TensorState:
+    """Keep only the top-magnitude chunks of ``state`` under a byte budget
+    (see :func:`digest_keep_plan`) — the ``DigestBudget`` shipping
+    policy's payload transform for single objects. If everything fits the
+    input is returned unchanged."""
+    tensors = state.as_dict()
+    keep = digest_keep_plan(((None, name, ct) for name, ct in
+                             tensors.items()), budget_bytes, interpret)
+    if keep is None:
+        return state
+    out = {name: mask_kept_chunks(ct, keep[(None, name)])
+           for name, ct in tensors.items() if keep.get((None, name))}
     return TensorState.of(out, lamport=state.lamport)
 
 

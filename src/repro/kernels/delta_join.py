@@ -21,11 +21,20 @@ jnp oracles in ``ref.py``; jit'd wrappers with ``interpret=`` in ``ops.py``.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+
+def _pad_rows(x: jax.Array, pad: int) -> jax.Array:
+    """Zero-pad the leading (chunk-count) axis by ``pad`` rows. Padded
+    versions are 0 == ⊥, so padded rows never win a merge and the digest
+    of a padded row is 0; outputs are sliced back to the true length."""
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
 
 
 def _join_kernel(av_ref, aver_ref, bv_ref, bver_ref, ov_ref, over_ref):
@@ -40,12 +49,20 @@ def delta_join(a_vals: jax.Array, a_vers: jax.Array,
                b_vals: jax.Array, b_vers: jax.Array,
                block_n: int = 256,
                interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
-    """a_vals, b_vals [n, chunk]; a_vers, b_vers [n] int32."""
+    """a_vals, b_vals [n, chunk]; a_vers, b_vers [n] int32.
+
+    ``n`` need not be a multiple of the block size: ragged chunk counts
+    are zero-padded to the block boundary (⊥ versions) and sliced back.
+    """
     n, chunk = a_vals.shape
     bn = min(block_n, n)
-    assert n % bn == 0, (n, bn)
-    grid = (n // bn,)
-    return pl.pallas_call(
+    pad = (-n) % bn
+    if pad:
+        a_vals, a_vers, b_vals, b_vers = (
+            _pad_rows(x, pad) for x in (a_vals, a_vers, b_vals, b_vers))
+    np_ = n + pad
+    grid = (np_ // bn,)
+    ov, over = pl.pallas_call(
         _join_kernel,
         grid=grid,
         in_specs=[
@@ -59,11 +76,78 @@ def delta_join(a_vals: jax.Array, a_vers: jax.Array,
             pl.BlockSpec((bn,), lambda i: (i,)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n, chunk), a_vals.dtype),
-            jax.ShapeDtypeStruct((n,), a_vers.dtype),
+            jax.ShapeDtypeStruct((np_, chunk), a_vals.dtype),
+            jax.ShapeDtypeStruct((np_,), a_vers.dtype),
         ],
         interpret=interpret,
     )(a_vals, a_vers, b_vals, b_vers)
+    return (ov[:n], over[:n]) if pad else (ov, over)
+
+
+def batched_delta_join(segments: Sequence[Tuple[jax.Array, jax.Array,
+                                                jax.Array, jax.Array]],
+                       block_n: int = 256, interpret: bool = False,
+                       join_fn=None, host_stage: bool = False,
+                       host_join_fn=None
+                       ) -> List[Tuple[jax.Array, jax.Array]]:
+    """Join many independent versioned-chunk segments in as few kernel
+    launches as possible.
+
+    ``segments`` is a sequence of ``(a_vals, a_vers, b_vals, b_vers)``
+    tuples (each ``[n_s, chunk_s]`` / ``[n_s]``). Segments sharing a
+    (chunk width, value dtype, version dtype) signature are concatenated
+    along the chunk axis into ONE stacked launch — the merge is pointwise
+    per chunk, so stacking chunks from many ``TensorState`` objects is
+    exact — and the outputs are split back per segment. This replaces one
+    jit dispatch *per object* with one launch *per signature*, which is
+    the objects/sec win for keyed stores holding thousands of tensors.
+
+    ``host_stage=True`` routes the glue through host numpy — near
+    zero-copy for CPU-backed arrays, where ``jnp.concatenate`` over
+    thousands of operands dominates — runs ONE single-grid-step launch
+    per signature (``host_join_fn(a_vals, a_vers, b_vals, b_vers, rows)``,
+    default: :func:`delta_join` with ``block_n=rows``) and returns the
+    per-segment outputs as numpy views into the stacked result. Use on
+    CPU; keep the default on-device path on TPU.
+
+    ``join_fn`` overrides the two-operand join of the on-device path
+    (e.g. the jit'd wrapper in ``kernels.ops``); defaults to
+    :func:`delta_join`. Returns ``(out_vals, out_vers)`` per segment, in
+    input order.
+    """
+    import numpy as np
+
+    if join_fn is None:
+        join_fn = functools.partial(delta_join, block_n=block_n,
+                                    interpret=interpret)
+    if host_join_fn is None:
+        host_join_fn = lambda av, avr, bv, bvr, rows: delta_join(
+            av, avr, bv, bvr, block_n=rows, interpret=interpret)
+    results: List[Tuple[jax.Array, jax.Array]] = [None] * len(segments)
+    groups = {}
+    for i, (av, avr, bv, bvr) in enumerate(segments):
+        sig = (av.shape[1], jnp.dtype(av.dtype), jnp.dtype(avr.dtype))
+        groups.setdefault(sig, []).append(i)
+    for sig, idxs in groups.items():
+        if len(idxs) == 1 and not host_stage:
+            results[idxs[0]] = join_fn(*segments[idxs[0]])
+            continue
+        sizes = [segments[i][0].shape[0] for i in idxs]
+        if host_stage:
+            cat = [np.concatenate([np.asarray(segments[i][j])
+                                   for i in idxs], axis=0)
+                   for j in range(4)]
+            ov, over = host_join_fn(*cat, cat[0].shape[0])
+            ov, over = np.asarray(ov), np.asarray(over)
+        else:
+            cat = [jnp.concatenate([segments[i][j] for i in idxs], axis=0)
+                   for j in range(4)]
+            ov, over = join_fn(*cat)
+        start = 0
+        for i, n_s in zip(idxs, sizes):
+            results[i] = (ov[start:start + n_s], over[start:start + n_s])
+            start += n_s
+    return results
 
 
 def _digest_kernel(x_ref, maxabs_ref, sumsq_ref):
@@ -74,21 +158,26 @@ def _digest_kernel(x_ref, maxabs_ref, sumsq_ref):
 
 def chunk_digest(x: jax.Array, block_n: int = 256,
                  interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
-    """x [n, chunk] → (max|x| per chunk [n], Σx² per chunk [n])."""
+    """x [n, chunk] → (max|x| per chunk [n], Σx² per chunk [n]).
+    Ragged ``n`` is zero-padded to the block boundary and sliced back."""
     n, chunk = x.shape
     bn = min(block_n, n)
-    assert n % bn == 0
-    return pl.pallas_call(
+    pad = (-n) % bn
+    if pad:
+        x = _pad_rows(x, pad)
+    np_ = n + pad
+    ma, ss = pl.pallas_call(
         _digest_kernel,
-        grid=(n // bn,),
+        grid=(np_ // bn,),
         in_specs=[pl.BlockSpec((bn, chunk), lambda i: (i, 0))],
         out_specs=[
             pl.BlockSpec((bn,), lambda i: (i,)),
             pl.BlockSpec((bn,), lambda i: (i,)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n,), jnp.float32),
-            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
         ],
         interpret=interpret,
     )(x)
+    return (ma[:n], ss[:n]) if pad else (ma, ss)

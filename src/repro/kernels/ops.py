@@ -16,10 +16,18 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .delta_join import batched_delta_join as _batched_delta_join
 from .delta_join import chunk_digest as _chunk_digest
 from .delta_join import delta_join as _delta_join
 from .flash_attention import flash_attention_fwd as _flash_fwd
 from .flash_attention import flash_decode_fwd as _flash_decode
+
+
+def use_pallas_default() -> bool:
+    """Whether the Mosaic Pallas kernels compile on the current backend.
+    On TPU call the kernels with ``interpret=False``; elsewhere (this
+    container: CPU) use interpret mode / the XLA oracles."""
+    return jax.default_backend() == "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "window", "softcap",
@@ -55,6 +63,23 @@ def delta_join(a_vals, a_vers, b_vals, b_vers, *, block_n: int = 256,
                        interpret=interpret)
 
 
+def batched_delta_join(segments, *, block_n: int = 256,
+                       interpret: bool = False, host_stage: bool = False):
+    """Stacked versioned-chunk merge over many objects' chunks: segments
+    sharing a (chunk-width, dtype) signature run as ONE kernel launch
+    (via the jit'd :func:`delta_join`, so repeated stacked shapes hit the
+    dispatch cache). ``host_stage=True`` selects the numpy-staged CPU
+    glue (single-grid-step launch, numpy-view outputs). Returns
+    (out_vals, out_vers) per segment."""
+    return _batched_delta_join(
+        segments, block_n=block_n, interpret=interpret,
+        host_stage=host_stage,
+        join_fn=lambda av, avr, bv, bvr: delta_join(
+            av, avr, bv, bvr, block_n=block_n, interpret=interpret),
+        host_join_fn=lambda av, avr, bv, bvr, rows: delta_join(
+            av, avr, bv, bvr, block_n=rows, interpret=interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def chunk_digest(x, *, block_n: int = 256,
                  interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
@@ -66,4 +91,5 @@ def chunk_digest(x, *, block_n: int = 256,
 attention_ref = ref.attention_ref
 decode_ref = ref.decode_ref
 delta_join_ref = ref.delta_join_ref
+batched_delta_join_ref = ref.batched_delta_join_ref
 chunk_digest_ref = ref.chunk_digest_ref

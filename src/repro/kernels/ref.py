@@ -71,6 +71,11 @@ def delta_join_ref(a_vals, a_vers, b_vals, b_vers) -> Tuple[jax.Array, jax.Array
             jnp.maximum(a_vers, b_vers))
 
 
+def batched_delta_join_ref(segments) -> list:
+    """Per-segment oracle for the stacked batched join."""
+    return [delta_join_ref(*s) for s in segments]
+
+
 def chunk_digest_ref(x) -> Tuple[jax.Array, jax.Array]:
     xf = x.astype(jnp.float32)
     return jnp.max(jnp.abs(xf), axis=-1), jnp.sum(xf * xf, axis=-1)

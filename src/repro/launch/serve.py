@@ -6,7 +6,16 @@ iterative decode over ring caches (SWA archs keep O(window) state), and
 greedy sampling. ``--replicate N`` additionally replicates the session
 table as an ORMap δ-CRDT across N gateway replicas over a lossy network —
 request metadata survives gateway failover with no coordinator (the
-serving-side use of the paper)."""
+serving-side use of the paper).
+
+``--sessions N`` is the scale-out version of the same story: N independent
+session objects live in a keyed ``LatticeStore`` replicated across the
+gateways, with rendezvous-hashed key ownership (``KeyOwnership`` +
+``ShardByKey``) so each gateway only buffers and ships the sessions it
+owns or replicates — bytes per anti-entropy round scale with a gateway's
+shard, not with the whole fleet's session count. Any gateway accepts any
+request (writes for non-owned keys forward to the owners through the
+same gossip)."""
 
 from __future__ import annotations
 
@@ -19,9 +28,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
-from repro.core import (AWORSet, MVRegister, NetConfig, ORMap, POLICY_SPECS,
-                        Replica, Simulator, causal_policy_spec, converged,
-                        make_policy, run_to_convergence)
+from repro.core import (AWORSet, Compose, MVRegister, NetConfig, ORMap,
+                        POLICY_SPECS, Replica, Simulator, StoreReplica,
+                        causal_policy_spec, converged, make_policy,
+                        run_to_convergence)
 from repro.models import decode_step, init_model, prefill
 
 
@@ -44,6 +54,12 @@ def main() -> None:
     ap.add_argument("--ship-policy", default="bp+rr", type=_policy_spec,
                     help="shipping policy for --replicate gossip "
                          f"(e.g. {', '.join(POLICY_SPECS)})")
+    ap.add_argument("--sessions", type=int, default=0,
+                    help="N keyed session objects spread across the "
+                         "gateways (LatticeStore + hash-sharded ownership; "
+                         "implies 3 gateways unless --replicate is set)")
+    ap.add_argument("--session-replication", type=int, default=2,
+                    help="replicas per session key under --sessions")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
@@ -106,6 +122,8 @@ def main() -> None:
 
     if args.replicate:
         _replicated_sessions(args, b)
+    if args.sessions:
+        _keyed_sessions(args)
 
 
 def _replicated_sessions(args, b: int) -> None:
@@ -135,6 +153,68 @@ def _replicated_sessions(args, b: int) -> None:
           f"gateways (25% loss, policy={args.ship_policy}, "
           f"payload_atoms={payload}): {statuses}")
     assert all(v == "done" for v in statuses.values())
+
+
+def _keyed_sessions(args) -> None:
+    """N session objects in a keyed LatticeStore across gateways, with
+    rendezvous-hash-sharded ownership: gossip ships each session only to
+    the gateways that replicate it."""
+    from repro.sync import KeyOwnership, ShardByKey
+
+    n_gw = max(args.replicate, 2) if args.replicate else 3
+    ids = [f"gw{k}" for k in range(n_gw)]
+    ownership = KeyOwnership(ids, replication=min(args.session_replication,
+                                                  n_gw))
+    sim = Simulator(NetConfig(loss=0.25, dup=0.1, seed=args.seed))
+    nodes = [sim.add_node(StoreReplica(
+        i, [j for j in ids if j != i], causal=True,
+        policy=Compose(make_policy(args.ship_policy), ShardByKey(ownership)),
+        rng=random.Random(args.seed + k), ownership=ownership))
+        for k, i in enumerate(ids)]
+
+    # gossip runs concurrently with ingest: register the periodic
+    # anti-entropy (and GC) ticks before the first write
+    for n in nodes:
+        sim.every(1.0, n.on_periodic)
+        sim.every(7.0, n.gc_deltas)
+
+    for s in range(args.sessions):
+        key = f"sess{s}"
+        gw = nodes[s % len(nodes)]   # ingress gateway; may not own the key
+        for status in ("queued", "prefilling", "decoding", "done"):
+            gw.update(key, MVRegister, "write_delta", gw.id, status)
+        if s % 8 == 7:
+            sim.run_for(0.5)
+
+    # then drive until every session's replica set agrees
+    keys = [f"sess{s}" for s in range(args.sessions)]
+    by_id = {n.id: n for n in nodes}
+
+    def settled() -> bool:
+        for key in keys:
+            states = [by_id[w].get(key, MVRegister)
+                      for w in ownership.owners(key)]
+            if any(s != states[0] for s in states[1:]):
+                return False
+            if states[0].read() != frozenset({"done"}):
+                return False
+        return True
+
+    t0 = sim.time
+    while sim.time - t0 < 10_000:
+        sim.run_for(2.0)
+        if settled():
+            break
+    assert settled(), "sharded session store failed to settle"
+
+    payload = sim.stats.payload_atoms()
+    per_gw = {i: len([k for k in keys if ownership.replicates(i, k)])
+              for i in ids}
+    print(f"  [δ-CRDT store] {args.sessions} sessions sharded over "
+          f"{n_gw} gateways (replication={ownership.replication}, 25% loss, "
+          f"policy={args.ship_policy}+shard): all owner replicas settled "
+          f"to 'done'")
+    print(f"    keys per gateway: {per_gw}   payload_atoms={payload}")
 
 
 if __name__ == "__main__":

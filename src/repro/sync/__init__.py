@@ -15,18 +15,24 @@ slow, lossy, partition-prone and membership is elastic — replication is
 * ``membership``    — elastic worker membership: AWORSet of workers +
                       monotone heartbeats; straggler detection/eviction;
                       ``ClusterReplica`` gossips the view through the
-                      unified propagation runtime (pluggable policies).
+                      unified propagation runtime (pluggable policies);
+                      ``KeyOwnership``/``ShardByKey`` rendezvous-hash the
+                      keyed-store keyspace over the live worker set so
+                      each replica buffers/ships only its shard.
 * ``metrics``       — duplicate-safe distributed metrics (per-replica
                       monotone entries; PN counters).
 """
 
 from .compression import TopKCompressor, sparse_nbytes
 from .localsgd import DeltaSyncPod, OuterParams
-from .membership import ClusterReplica, ClusterState, Membership
+from .membership import (ClusterReplica, ClusterState, KeyOwnership,
+                         Membership, ShardByKey, owners_for_key,
+                         rendezvous_score)
 from .metrics import Metrics, MetricsState
 
 __all__ = [
     "TopKCompressor", "sparse_nbytes", "DeltaSyncPod", "OuterParams",
-    "ClusterReplica", "ClusterState", "Membership", "Metrics",
+    "ClusterReplica", "ClusterState", "KeyOwnership", "Membership",
+    "ShardByKey", "owners_for_key", "rendezvous_score", "Metrics",
     "MetricsState",
 ]

@@ -18,13 +18,16 @@ and a late pod's dots still merge idempotently when they eventually arrive.
 
 from __future__ import annotations
 
+import hashlib
 import random
 from dataclasses import dataclass, field
-from typing import Dict, FrozenSet, Optional, Sequence, Tuple
+from typing import (Callable, Dict, FrozenSet, Iterable, Optional, Sequence,
+                    Tuple, Union)
 
 from ..core.crdts import AWORSet, DeltaCRDT, LWWSet
 from ..core.dots import ReplicaId
 from ..core.propagation import Replica, ShippingPolicy
+from ..core.store import LatticeStore
 
 
 @dataclass(frozen=True)
@@ -131,6 +134,120 @@ class Membership:
         alive = state.alive(now, self.timeout)
         need = max(1, int(len(state.workers()) * fraction))
         return alive if len(alive) >= need else frozenset()
+
+
+# ---------------------------------------------------------------------------
+# Hash-sharded key ownership (rendezvous hashing over the live worker set)
+# ---------------------------------------------------------------------------
+
+def rendezvous_score(worker: ReplicaId, key: str) -> int:
+    """Deterministic, process-independent score of ``worker`` for ``key``
+    (highest-random-weight / rendezvous hashing). blake2b, not ``hash()``:
+    the builtin is salted per process, which would shard every replica
+    differently."""
+    h = hashlib.blake2b(f"{worker}\x00{key}".encode("utf-8"), digest_size=8)
+    return int.from_bytes(h.digest(), "big")
+
+
+def owners_for_key(key: str, workers: Iterable[ReplicaId],
+                   replication: int = 1) -> Tuple[ReplicaId, ...]:
+    """The ``replication`` highest-scoring live workers for ``key``.
+
+    Rendezvous hashing gives minimal disruption under elasticity: a
+    worker joining or leaving only moves the keys it scores highest on
+    (expected 1/n of the keyspace) — every other key keeps its owners.
+    """
+    ranked = sorted(workers, key=lambda w: (-rendezvous_score(w, key), w))
+    return tuple(ranked[:max(1, replication)])
+
+
+class KeyOwnership:
+    """Key → replica-set assignment over a (possibly live) worker set.
+
+    ``workers`` is either a static iterable of worker ids or a callable
+    returning the current set — pass e.g.
+    ``lambda: cluster_replica.X.workers()`` so ownership re-shuffles as
+    the gossiped membership OR-Set changes (join/leave), with rendezvous
+    hashing keeping the re-shuffle minimal. ``replication`` is the number
+    of replicas per key (the key's replica set = its owners)."""
+
+    _CACHE_MAX = 1 << 16    # bound the per-key memo (serving keyspaces
+                            # are unbounded; rendezvous recompute is cheap)
+
+    def __init__(self, workers: Union[Iterable[ReplicaId],
+                                      Callable[[], Iterable[ReplicaId]]],
+                 replication: int = 1):
+        if replication < 1:
+            raise ValueError(f"replication must be ≥ 1, got {replication}")
+        self._workers = workers
+        self.replication = replication
+        # owners() sits on the gossip hot path (ShardByKey consults it per
+        # key per destination per round): memoize per key, invalidated
+        # whenever the live worker set changes
+        self._cache_workers: Tuple[ReplicaId, ...] = ()
+        self._cache: Dict[str, Tuple[ReplicaId, ...]] = {}
+
+    def workers(self) -> Tuple[ReplicaId, ...]:
+        ws = self._workers() if callable(self._workers) else self._workers
+        return tuple(sorted(ws))
+
+    def owners(self, key: str) -> Tuple[ReplicaId, ...]:
+        ws = self.workers()
+        if ws != self._cache_workers:
+            self._cache_workers = ws       # membership changed: re-shuffle
+            self._cache = {}
+        hit = self._cache.get(key)
+        if hit is None:
+            hit = owners_for_key(key, ws, self.replication) if ws else ()
+            if len(self._cache) >= self._CACHE_MAX:
+                self._cache.clear()
+            self._cache[key] = hit
+        return hit
+
+    def owner(self, key: str) -> Optional[ReplicaId]:
+        """The primary (top-scoring) owner, or None with no workers."""
+        owners = self.owners(key)
+        return owners[0] if owners else None
+
+    def replicates(self, worker: ReplicaId, key: str) -> bool:
+        return worker in self.owners(key)
+
+
+class ShardByKey(ShippingPolicy):
+    """Ship each key's deltas only to the replicas that own/replicate it.
+
+    ``include`` drops buffered store entries carrying nothing the
+    destination replicates; ``finalize`` restricts every outgoing store
+    payload (delta-interval joins AND full-state fallbacks) to the
+    destination's shard, so bytes shipped per round scale with the keys a
+    peer replicates, not with store size. Non-store payloads pass through
+    (the policy composes with single-object replicas as a no-op).
+
+    Sharding intentionally relaxes *global* convergence to *per-key*
+    convergence across each key's replica set — a destination never
+    receives keys outside its shard, so whole-store equality across all
+    replicas no longer holds (and ``ghost_check``, which asserts exactly
+    that equivalence, must stay off). Acks remain truthful for the shard
+    the receiver is responsible for, which is all it serves.
+    """
+
+    def __init__(self, ownership: KeyOwnership):
+        self.ownership = ownership
+        self.name = f"shard:{ownership.replication}"
+
+    def _dst_keys(self, dst: ReplicaId, store: LatticeStore):
+        return [k for k in store.keys()
+                if self.ownership.replicates(dst, k)]
+
+    def include(self, replica, dst, index, entry) -> bool:
+        if not isinstance(entry.delta, LatticeStore):
+            return True
+        return bool(self._dst_keys(dst, entry.delta))
+
+    def finalize(self, replica, dst, payload):
+        if not isinstance(payload, LatticeStore):
+            return payload
+        return payload.restrict(self._dst_keys(dst, payload))
 
 
 class ClusterReplica(Replica):

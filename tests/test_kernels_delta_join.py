@@ -6,10 +6,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-import pytest as _pytest
-_pytest.importorskip(
-    "hypothesis", reason="dev dependency — pip install -r requirements-dev.txt")
-from hypothesis import given, settings, strategies as st
+
+try:        # only the property sweep needs hypothesis (dev dependency)
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels import ops
 
@@ -35,9 +37,16 @@ def test_delta_join_matches_ref(dtype, n, chunk, bn):
     np.testing.assert_array_equal(np.asarray(overs), np.asarray(rvers))
 
 
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 2**31 - 1))
-def test_delta_join_kernel_is_a_join(seed):
+if HAVE_HYPOTHESIS:
+    _property = lambda f: settings(max_examples=20, deadline=None)(
+        given(seed=st.integers(0, 2**31 - 1))(f))
+else:
+    _property = pytest.mark.skip(
+        reason="dev dependency — pip install -r requirements-dev.txt")
+
+
+@_property
+def test_delta_join_kernel_is_a_join(seed=0):
     """Kernel-level lattice laws: idempotent / commutative / associative.
     (Ties must carry equal values, as the TensorState lattice guarantees.)"""
     rng = np.random.default_rng(seed)
@@ -62,7 +71,67 @@ def test_delta_join_kernel_is_a_join(seed):
     assert eq(J(J(a, b), c), J(a, J(b, c)))    # associative
 
 
-@pytest.mark.parametrize("n,chunk,bn", [(256, 128, 128), (32, 256, 32)])
+@pytest.mark.parametrize("n,chunk,bn", [
+    (100, 128, 32),    # n not a multiple of the block
+    (7, 128, 8),       # n smaller than the block
+    (1000, 128, 256),  # large ragged tail
+    (13, 256, 13),     # bn == n exactly (no padding)
+])
+def test_delta_join_ragged_chunk_counts_match_ref(n, chunk, bn):
+    """Chunk counts that are NOT multiples of the block size: the kernel
+    zero-pads to the block boundary (⊥ versions) and slices back."""
+    av, avers = _mk(n, chunk, jnp.float32, 2)
+    bv, bvers = _mk(n, chunk, jnp.float32, 3)
+    ov, overs = ops.delta_join(av, avers, bv, bvers, block_n=bn,
+                               interpret=True)
+    rv, rvers = ops.delta_join_ref(av, avers, bv, bvers)
+    assert ov.shape == (n, chunk) and overs.shape == (n,)
+    np.testing.assert_array_equal(np.asarray(ov), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(overs), np.asarray(rvers))
+
+
+@pytest.mark.parametrize("sizes", [
+    [4, 4, 4],                 # uniform — one stacked launch
+    [1, 3, 7, 13, 5],          # ragged segment lengths
+    [8],                       # single segment
+])
+def test_batched_delta_join_interpret_parity_with_ref(sizes):
+    """Stacked multi-segment launch == per-segment oracle, on CPU in
+    interpret mode (the satellite's interpret-mode parity check)."""
+    segs = []
+    for i, n in enumerate(sizes):
+        av, avers = _mk(n, 128, jnp.float32, 10 + i)
+        bv, bvers = _mk(n, 128, jnp.float32, 50 + i)
+        segs.append((av, avers, bv, bvers))
+    outs = ops.batched_delta_join(segs, block_n=8, interpret=True)
+    refs = ops.batched_delta_join_ref(segs)
+    assert len(outs) == len(segs)
+    for (ov, overs), (rv, rvers), (av, _, _, _) in zip(outs, refs, segs):
+        assert ov.shape == av.shape
+        np.testing.assert_array_equal(np.asarray(ov), np.asarray(rv))
+        np.testing.assert_array_equal(np.asarray(overs), np.asarray(rvers))
+
+
+def test_batched_delta_join_groups_mixed_signatures():
+    """Segments with different chunk widths / dtypes cannot share a
+    launch; grouping must still return per-segment results in order."""
+    segs = []
+    for i, (n, chunk, dt) in enumerate([(4, 128, jnp.float32),
+                                        (6, 256, jnp.float32),
+                                        (4, 128, jnp.bfloat16),
+                                        (10, 128, jnp.float32)]):
+        av, avers = _mk(n, chunk, dt, 20 + i)
+        bv, bvers = _mk(n, chunk, dt, 80 + i)
+        segs.append((av, avers, bv, bvers))
+    outs = ops.batched_delta_join(segs, interpret=True)
+    refs = ops.batched_delta_join_ref(segs)
+    for (ov, overs), (rv, rvers) in zip(outs, refs):
+        np.testing.assert_array_equal(np.asarray(ov), np.asarray(rv))
+        np.testing.assert_array_equal(np.asarray(overs), np.asarray(rvers))
+
+
+@pytest.mark.parametrize("n,chunk,bn", [(256, 128, 128), (32, 256, 32),
+                                        (100, 128, 32), (5, 128, 8)])
 def test_chunk_digest_matches_ref(n, chunk, bn):
     x, _ = _mk(n, chunk, jnp.float32, 7)
     ma, ss = ops.chunk_digest(x, block_n=bn, interpret=True)

@@ -19,7 +19,7 @@ from hypothesis import given, settings, strategies as st
 
 from crdt_adapters import ADAPTERS, random_reachable_states
 from repro.core import (CausalNode, GCounter, NetConfig, POLICY_SPECS,
-                        Simulator, converged, make_policy,
+                        Simulator, StoreReplica, converged, make_policy,
                         run_to_convergence)
 
 POLICY_ADAPTERS = ["gcounter", "pncounter", "aworset", "ormap", "mvreg"]
@@ -108,6 +108,39 @@ def test_rr_never_ships_a_covered_atom(seed):
             sim.crash(ids[0], downtime=3.0)   # forces fallback re-gossip
     run_to_convergence(sim, nodes, interval=1.0, max_time=60_000)
     assert converged(nodes)
+
+
+@pytest.mark.parametrize("spec", POLICY_SPECS)
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_keyed_store_converges_under_every_policy(spec, seed):
+    """Store-backed replicas: random multi-key workloads (mixed embedded
+    datatypes per key) converge under loss/dup/reorder with every
+    shipping policy, with the Prop. 2 ghost-check on."""
+    rng = random.Random(seed)
+    sim = Simulator(NetConfig(loss=0.25, dup=0.15, seed=seed))
+    ids = [f"n{k}" for k in range(3)]
+    nodes = [sim.add_node(StoreReplica(
+        i, [j for j in ids if j != i], causal=True, ghost_check=True,
+        rng=random.Random(seed + 1), policy=make_policy(spec)))
+        for i in ids]
+    key_types = {f"k{j}": ADAPTERS[name] for j, name in enumerate(
+        ["gcounter", "aworset", "ormap", "mvreg"])}
+    for _ in range(15):
+        n = rng.choice(nodes)
+        key = rng.choice(list(key_types))
+        ad = key_types[key]
+        op = rng.choice(ad.ops)
+        args = op.make_args(rng)
+        n.operation(lambda S, i=n.id, key=key, ad=ad, op=op, args=args:
+                    S.update_delta(key, type(ad.bottom),
+                                   lambda v: op.delta(v, i, *args)))
+        if rng.random() < 0.5:
+            sim.run_for(0.5)
+    run_to_convergence(sim, nodes, interval=1.0, max_time=60_000)
+    assert converged(nodes)
+    fails = [f for n in nodes for f in n.ghost_failures]
+    assert not fails, fails
 
 
 @pytest.mark.parametrize("name", ["gcounter", "pncounter"])

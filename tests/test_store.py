@@ -1,0 +1,415 @@
+"""Keyed LatticeStore: lattice laws, store-backed replica convergence
+under every shipping policy, batched-join parity, store-wide digest
+selection, and hash-sharded ownership (rendezvous stability + per-key
+convergence + shard-restricted payloads)."""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (Compose, DigestBudget, GCounter, LatticeStore,
+                        NetConfig, POLICY_SPECS, PNCounter, Replica,
+                        Simulator, StoreReplica, converged,
+                        digest_select_store, make_policy,
+                        run_to_convergence)
+from repro.sync import KeyOwnership, ShardByKey, owners_for_key
+
+
+def _gc(*pairs):
+    return GCounter(tuple(pairs))
+
+
+# ---------------------------------------------------------------------------
+# Lattice laws
+# ---------------------------------------------------------------------------
+
+def test_store_join_is_pointwise_and_absorbs_missing_keys():
+    a = LatticeStore.of({"k1": _gc(("a", 1))})
+    b = LatticeStore.of({"k1": _gc(("b", 2)), "k2": _gc(("b", 1))})
+    j = a.join(b)
+    assert j.get("k1").value() == 3
+    assert j.get("k2").value() == 1
+    assert a.leq(j) and b.leq(j) and not j.leq(a)
+
+
+def test_store_lattice_laws_mixed_types():
+    rng = random.Random(7)
+    def rand_store():
+        out = {}
+        for k in range(rng.randint(0, 4)):
+            if rng.random() < 0.5:
+                out[f"g{k}"] = _gc((rng.choice("abc"), rng.randint(1, 5)))
+            else:
+                pn = PNCounter.bottom()
+                out[f"p{k}"] = pn.inc_delta(rng.choice("abc"),
+                                            rng.randint(1, 3))
+        return LatticeStore.of(out)
+    for _ in range(25):
+        A, B, C = rand_store(), rand_store(), rand_store()
+        assert A.join(A) == A                          # idempotent
+        assert A.join(B) == B.join(A)                  # commutative
+        assert A.join(B).join(C) == A.join(B.join(C))  # associative
+        assert A.leq(A.join(B))                        # inflationary
+
+
+def test_bottom_valued_entry_equals_absent_key():
+    assert LatticeStore.of({"k": GCounter.bottom()}) == LatticeStore.bottom()
+    assert LatticeStore.of({"k": GCounter.bottom()}).leq(LatticeStore.bottom())
+    assert LatticeStore.bottom().leq(LatticeStore.of({"k": _gc(("a", 1))}))
+
+
+def test_store_decompose_is_a_faithful_join_decomposition():
+    X = LatticeStore.of({"k1": _gc(("a", 2), ("b", 1)), "k2": _gc(("c", 3))})
+    atoms = X.decompose()
+    rejoined = LatticeStore.bottom()
+    for a in atoms:
+        assert a.leq(X)
+        assert len(a.keys()) == 1               # per-key (and finer) atoms
+        rejoined = rejoined.join(a)
+    assert rejoined == X
+
+
+def test_apply_delta_lifts_embedded_mutators():
+    s = LatticeStore.bottom()
+    d1 = s.apply_delta("k", GCounter, "inc_delta", "r0")
+    s = s.join(d1)
+    d2 = s.apply_delta("k", GCounter, "inc_delta", "r0")
+    s = s.join(d2)
+    assert s.get("k").value() == 2
+    assert d2.keys() == frozenset({"k"})
+
+
+def test_restrict_is_a_lattice_projection():
+    X = LatticeStore.of({"a": _gc(("r", 1)), "b": _gc(("r", 2))})
+    sub = X.restrict(["a"])
+    assert sub.keys() == frozenset({"a"})
+    assert sub.leq(X)
+    assert X.join(sub) == X
+
+
+# ---------------------------------------------------------------------------
+# Batched TensorState join parity (fast stacked path, general path, loop)
+# ---------------------------------------------------------------------------
+
+def _mk_tensor_store(keys, n_tensors=2, n_chunks=3, chunk=128, seed=0,
+                     version=1):
+    from repro.core.tensor_lattice import ChunkedTensor, TensorState
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k in keys:
+        ts = {f"t{t}": ChunkedTensor(
+                  rng.normal(size=(n_chunks, chunk)).astype(np.float32),
+                  rng.integers(0, 3, size=(n_chunks,)).astype(np.int32)
+                  * 2 + version)
+              for t in range(n_tensors)}
+        out[k] = TensorState.of(ts)
+    return LatticeStore.of(out)
+
+
+def _tensors_equal(a, b):
+    for k in set(a.keys()) | set(b.keys()):
+        ca, cb = a.get(k).as_dict(), b.get(k).as_dict()
+        assert set(ca) == set(cb)
+        for name in ca:
+            assert np.array_equal(np.asarray(ca[name].values),
+                                  np.asarray(cb[name].values))
+            assert np.array_equal(np.asarray(ca[name].versions),
+                                  np.asarray(cb[name].versions))
+
+
+def test_batched_join_matches_per_key_loop_aligned():
+    keys = [f"k{i}" for i in range(17)]
+    a = _mk_tensor_store(keys, seed=0, version=1)
+    b = _mk_tensor_store(keys, seed=1, version=2)
+    _tensors_equal(a.join(b), a.join(b, batched=False))
+
+
+def test_batched_join_matches_per_key_loop_subset_delta():
+    """Delta touching a subset of keys + a key only present on one side:
+    exercises the general segment path, not the aligned fast path."""
+    keys = [f"k{i}" for i in range(9)]
+    a = _mk_tensor_store(keys, seed=0, version=1)
+    b = _mk_tensor_store(keys[:4] + ["extra"], seed=1, version=2)
+    _tensors_equal(a.join(b), a.join(b, batched=False))
+    _tensors_equal(b.join(a), b.join(a, batched=False))
+
+
+def test_batched_join_mixed_value_types_falls_back():
+    keys = [f"k{i}" for i in range(5)]
+    a = _mk_tensor_store(keys, seed=0, version=1)
+    a = a.join(LatticeStore.of({"counter": _gc(("r", 1))}))
+    b = _mk_tensor_store(keys, seed=1, version=2)
+    b = b.join(LatticeStore.of({"counter": _gc(("s", 2))}))
+    j = a.join(b)
+    _tensors_equal(
+        j.restrict(keys), a.join(b, batched=False).restrict(keys))
+    assert j.get("counter").value() == 3
+
+
+def test_batched_join_ragged_chunk_counts():
+    """Keys with different chunk counts (not multiples of any block)."""
+    from repro.core.tensor_lattice import ChunkedTensor, TensorState
+    rng = np.random.default_rng(5)
+    def one(n, seed, ver):
+        r = np.random.default_rng(seed)
+        return TensorState.of({"w": ChunkedTensor(
+            r.normal(size=(n, 128)).astype(np.float32),
+            np.full((n,), ver, np.int32))})
+    a = LatticeStore.of({f"k{i}": one(n, i, 1)
+                         for i, n in enumerate([1, 3, 7, 13, 5])})
+    b = LatticeStore.of({f"k{i}": one(n, 100 + i, 2)
+                         for i, n in enumerate([1, 3, 7, 13, 5])})
+    _tensors_equal(a.join(b), a.join(b, batched=False))
+
+
+# ---------------------------------------------------------------------------
+# Store-backed replica: single-object wrapper + keyed convergence
+# ---------------------------------------------------------------------------
+
+def test_single_object_replica_is_a_one_key_store():
+    r = Replica("a", GCounter.bottom(), ["b"], causal=True)
+    r.operation(lambda X: X.inc_delta("a"))
+    assert isinstance(r.store, LatticeStore)
+    assert r.store.get(Replica.SINGLE_KEY).value() == 1
+    assert r.X == _gc(("a", 1))                 # unwrapped view
+    r.crash_and_recover()
+    assert r.X.value() == 1                     # durable via the store
+
+
+def test_store_replica_keyed_update_and_get():
+    r = StoreReplica("a", ["b"], causal=True)
+    r.update("s1", GCounter, "inc_delta", "a")
+    r.update("s2", GCounter, "inc_delta", "a")
+    r.update("s1", GCounter, "inc_delta", "a")
+    assert r.get("s1").value() == 2
+    assert r.get("s2").value() == 1
+    assert r.get("nope", GCounter).value() == 0
+    assert r.keys() == frozenset({"s1", "s2"})
+
+
+@pytest.mark.parametrize("spec", POLICY_SPECS)
+def test_store_replica_converges_under_loss_dup_reorder(spec):
+    sim = Simulator(NetConfig(loss=0.25, dup=0.15, seed=42))
+    ids = [f"n{k}" for k in range(3)]
+    nodes = [sim.add_node(StoreReplica(
+        i, [j for j in ids if j != i], causal=True,
+        policy=make_policy(spec), rng=random.Random(43), ghost_check=True))
+        for i in ids]
+    rng = random.Random(44)
+    for t in range(30):
+        n = rng.choice(nodes)
+        n.update(f"k{t % 6}", GCounter, "inc_delta", n.id)
+        if rng.random() < 0.5:
+            sim.run_for(0.5)
+    run_to_convergence(sim, nodes, interval=1.0, max_time=60_000)
+    assert converged(nodes)
+    assert not [f for n in nodes for f in n.ghost_failures]
+    total = sum(nodes[0].get(f"k{j}").value() for j in range(6))
+    assert total == 30                          # no write lost or doubled
+
+
+def test_store_replica_survives_crash_with_durable_store():
+    sim = Simulator(NetConfig(loss=0.1, seed=7))
+    ids = ["n0", "n1", "n2"]
+    nodes = [sim.add_node(StoreReplica(
+        i, [j for j in ids if j != i], causal=True,
+        policy=make_policy("bp+rr"), rng=random.Random(8))) for i in ids]
+    rng = random.Random(9)
+    for t in range(20):
+        n = rng.choice(nodes)
+        if n.alive:
+            n.update(f"k{t % 4}", GCounter, "inc_delta", n.id)
+        sim.run_for(0.5)
+        if t == 10:
+            sim.crash("n0", downtime=3.0)
+    run_to_convergence(sim, nodes, interval=1.0, max_time=60_000)
+    assert converged(nodes)
+
+
+# ---------------------------------------------------------------------------
+# Store-wide digest selection
+# ---------------------------------------------------------------------------
+
+def test_digest_select_store_picks_keys_by_energy_globally():
+    from repro.core.tensor_lattice import ChunkedTensor, TensorState
+    def one(scale, n=4, chunk=128):
+        vals = np.full((n, chunk), scale, np.float32)
+        return TensorState.of({"w": ChunkedTensor(
+            vals, np.full((n,), 1, np.int32))})
+    store = LatticeStore.of({"hot": one(10.0), "cold": one(0.1),
+                             "meta": _gc(("r", 1))})
+    per_chunk = 4 * 128 + 8 + 4
+    sel = digest_select_store(store, budget_bytes=4 * per_chunk)
+    assert sel.leq(store.restrict(["hot", "cold"]).join(
+        LatticeStore.of({"meta": _gc(("r", 1))})))
+    assert "hot" in sel.keys()                  # all budget went to hot
+    assert "cold" not in sel.keys()
+    assert sel.get("meta") == _gc(("r", 1))     # non-tensor passes through
+    # everything fits ⇒ unchanged
+    assert digest_select_store(store, budget_bytes=10 ** 9) == store
+
+
+def test_digest_budget_policy_applies_across_store_payloads():
+    from repro.core.tensor_lattice import ChunkedTensor, TensorState
+    def one(scale):
+        return TensorState.of({"w": ChunkedTensor(
+            np.full((2, 128), scale, np.float32),
+            np.full((2,), 1, np.int32))})
+    per_chunk = 4 * 128 + 8 + 4
+    pol = DigestBudget(budget_bytes=2 * per_chunk)
+    r = StoreReplica("a", ["b"], causal=False, policy=pol)
+    payload = LatticeStore.of({"hot": one(9.0), "cold": one(0.2)})
+    out = pol.finalize(r, "b", payload)
+    assert out.keys() == frozenset({"hot"})
+
+
+# ---------------------------------------------------------------------------
+# Rendezvous ownership + sharded shipping
+# ---------------------------------------------------------------------------
+
+def test_rendezvous_owners_deterministic_and_spread():
+    workers = [f"w{k}" for k in range(5)]
+    keys = [f"key{i}" for i in range(200)]
+    assign = {k: owners_for_key(k, workers, 2) for k in keys}
+    assert assign == {k: owners_for_key(k, list(reversed(workers)), 2)
+                      for k in keys}            # order-independent
+    per_worker = {w: sum(1 for o in assign.values() if w in o)
+                  for w in workers}
+    assert all(v > 0 for v in per_worker.values())   # no dead worker
+
+
+def test_rendezvous_reshuffle_is_minimal_on_leave():
+    workers = [f"w{k}" for k in range(6)]
+    keys = [f"key{i}" for i in range(300)]
+    before = {k: owners_for_key(k, workers, 1)[0] for k in keys}
+    after = {k: owners_for_key(k, [w for w in workers if w != "w3"], 1)[0]
+             for k in keys}
+    moved = [k for k in keys if before[k] != after[k]]
+    assert all(before[k] == "w3" for k in moved)   # only the departed's keys
+    assert len(moved) == sum(1 for k in keys if before[k] == "w3")
+
+
+def test_key_ownership_tracks_live_worker_callable():
+    live = {"w0", "w1", "w2"}
+    own = KeyOwnership(lambda: live, replication=2)
+    key = "session-42"
+    before = own.owners(key)
+    live.add("w3")                              # elastic join re-shuffles
+    after = own.owners(key)
+    assert len(before) == len(after) == 2
+    assert set(after) <= {"w0", "w1", "w2", "w3"}
+
+
+class _ShardAuditSim(Simulator):
+    """Asserts every delta payload only carries keys its destination
+    replicates (the ShardByKey guarantee)."""
+
+    def __init__(self, cfg, ownership):
+        super().__init__(cfg)
+        self.ownership = ownership
+
+    def send(self, src, dst, msg):
+        if isinstance(msg, tuple) and msg and msg[0] == "delta":
+            payload = msg[1]
+            if isinstance(payload, LatticeStore):
+                for k in payload.keys():
+                    assert self.ownership.replicates(dst, k), \
+                        f"{src}->{dst}: shipped non-owned key {k}"
+        super().send(src, dst, msg)
+
+
+def test_sharded_store_converges_per_key_and_ships_only_owned_keys():
+    ids = [f"gw{k}" for k in range(4)]
+    own = KeyOwnership(ids, replication=2)
+    sim = _ShardAuditSim(NetConfig(loss=0.2, dup=0.1, seed=21), own)
+    nodes = [sim.add_node(StoreReplica(
+        i, [j for j in ids if j != i], causal=True,
+        policy=Compose(make_policy("bp+rr"), ShardByKey(own)),
+        rng=random.Random(22), ownership=own)) for i in ids]
+    by_id = {n.id: n for n in nodes}
+    rng = random.Random(23)
+    keys = [f"s{j}" for j in range(10)]
+    writes = 0
+    for t in range(50):
+        n = rng.choice(nodes)       # ingress gateway, often not an owner
+        n.update(rng.choice(keys), GCounter, "inc_delta", n.id)
+        writes += 1
+        sim.run_for(0.4)
+    for _ in range(300):
+        for n in nodes:
+            n.on_periodic()
+        sim.run_for(2.0)
+        done = all(
+            len({repr(by_id[w].get(k, GCounter)) for w in own.owners(k)}) == 1
+            for k in keys)
+        if done:
+            break
+    # per-key convergence across each key's replica set...
+    total = 0
+    for k in keys:
+        owners = own.owners(k)
+        states = [by_id[w].get(k, GCounter) for w in owners]
+        assert all(s == states[0] for s in states[1:]), k
+        total += states[0].value()
+    # ...and no write lost despite ingress at non-owners + 20% loss
+    assert total == writes
+
+
+def test_sharded_replica_buffers_only_its_shard():
+    ids = ["a", "b", "c"]
+    own = KeyOwnership(ids, replication=1)
+    r = StoreReplica("a", ["b", "c"], causal=True,
+                     policy=ShardByKey(own), ownership=own)
+    r.attach(_NullSim())
+    foreign = next(k for k in (f"x{i}" for i in range(50))
+                   if not own.replicates("a", k))
+    mine = next(k for k in (f"x{i}" for i in range(50))
+                if own.replicates("a", k))
+    delta = (LatticeStore.bottom()
+             .apply_delta(foreign, GCounter, "inc_delta", "b")
+             .join(LatticeStore.bottom()
+                   .apply_delta(mine, GCounter, "inc_delta", "b")))
+    r.on_receive("b", ("delta", delta, 1, None))
+    # joined into X (cheap safety) but buffered only for the owned shard
+    assert foreign in r.X.keys()
+    buffered = [e.delta for e in r.entries.values() if e.origin == "b"]
+    assert buffered and all(foreign not in d.keys() for d in buffered)
+    assert any(mine in d.keys() for d in buffered)
+
+
+# ---------------------------------------------------------------------------
+# Bounded per-neighbor bookkeeping (elastic membership, satellite)
+# ---------------------------------------------------------------------------
+
+class _NullSim:
+    def send(self, src, dst, msg):
+        pass
+
+
+def test_inflight_is_capped_per_destination():
+    r = Replica("a", GCounter.bottom(), ["b"], causal=True,
+                policy=make_policy("rr"))
+    r.attach(_NullSim())
+    for _ in range(40):                     # b never acks
+        r.operation(lambda X: X.inc_delta("a"))
+        r._ship_to("b")
+    per_b = [k for k in r._inflight if k[0] == "b"]
+    assert len(per_b) <= Replica.INFLIGHT_CAP
+
+
+def test_departed_neighbors_are_pruned_from_bookkeeping():
+    r = Replica("a", GCounter.bottom(), ["b", "c"], causal=True,
+                policy=make_policy("rr"))
+    r.attach(_NullSim())
+    r.operation(lambda X: X.inc_delta("a"))
+    r._ship_to("b")
+    r._ship_to("c")
+    r.on_receive("b", ("ack", r.c))
+    r.on_receive("c", ("ack", r.c))
+    assert "c" in r.A and "c" in r._known
+    r.neighbors.remove("c")                 # elastic departure
+    r.gc_deltas()
+    assert "c" not in r.A and "c" not in r._known
+    assert all(dst != "c" for dst, _ in r._inflight)
+    assert "b" in r.A                       # live peer bookkeeping kept
