@@ -9,10 +9,14 @@ Two axes:
 2. The shipping-policy axis on the unified propagation runtime: the same
    seeded workload runs under every policy in ``POLICY_SPECS`` (ship-all,
    state-every-k, avoid-back-propagation, remove-redundant, bp+rr) across
-   loss / duplication / partition scenarios, reporting structural
-   bytes-shipped per policy. Invariants asserted here (and unit-tested in
-   tests/test_propagation.py): every policy converges to the same state,
-   and BP+RR ships strictly fewer payload atoms than ship-all.
+   loss / duplication / partition scenarios. Invariants asserted here
+   (and unit-tested in tests/test_propagation.py): every policy converges
+   to the same state, and BP+RR ships strictly fewer payload bytes than
+   ship-all.
+
+Every replica gossips through the binary δ-wire codec, so byte reports
+are **measured encoded-frame lengths** (``len(frame)``), not structural
+atom estimates.
 """
 
 from __future__ import annotations
@@ -24,6 +28,9 @@ from typing import List, Tuple
 from repro.core import (AWORSet, BasicNode, CausalNode, GCounter, NetConfig,
                         POLICY_SPECS, Simulator, make_policy,
                         run_to_convergence)
+from repro.wire import WireCodec
+
+WIRE = WireCodec()
 
 
 def _workload(nodes, sim, rng, n_ops=60):
@@ -47,11 +54,12 @@ def algo_rows() -> List[Tuple[str, float, str]]:
             if algo == "alg1_basic":
                 nodes = [sim.add_node(BasicNode(
                     i, AWORSet.bottom(), [j for j in ids if j != i],
-                    transitive=True, ship_state_every=5)) for i in ids]
+                    transitive=True, ship_state_every=5, wire=WIRE))
+                    for i in ids]
             else:
                 nodes = [sim.add_node(CausalNode(
                     i, AWORSet.bottom(), [j for j in ids if j != i],
-                    rng=random.Random(13))) for i in ids]
+                    rng=random.Random(13), wire=WIRE)) for i in ids]
             rng = random.Random(17)
             t0 = time.perf_counter()
             _workload(nodes, sim, rng)
@@ -61,7 +69,7 @@ def algo_rows() -> List[Tuple[str, float, str]]:
             payload = _payload_atoms(sim)
             rows.append((
                 f"antientropy_{algo}_loss={loss}", wall_us,
-                f"payload_atoms={payload} sim_t_conv={t_conv:.0f} "
+                f"frame_bytes={payload} sim_t_conv={t_conv:.0f} "
                 f"msgs={sim.stats.sent} dropped={sim.stats.dropped}"))
     return rows
 
@@ -102,8 +110,8 @@ def policy_rows() -> List[Tuple[str, float, str]]:
                       else AWORSet.bottom())
             nodes = [sim.add_node(CausalNode(
                 i, bottom, [j for j in ids if j != i],
-                rng=random.Random(13), policy=make_policy(spec)))
-                for i in ids]
+                rng=random.Random(13), policy=make_policy(spec),
+                wire=WIRE)) for i in ids]
             rng = random.Random(17)
             t0 = time.perf_counter()
             if label == "crash":
@@ -117,21 +125,21 @@ def policy_rows() -> List[Tuple[str, float, str]]:
             final_by[spec] = nodes[0].X
             rows.append((
                 f"antientropy_policy={spec}_{label}", wall_us,
-                f"payload_atoms={payload_by[spec]} "
+                f"frame_bytes={payload_by[spec]} "
                 f"sim_t_conv={t_conv:.0f} msgs={sim.stats.sent}"))
         # identical workload ⇒ identical converged state under every policy
         states = list(final_by.values())
         assert all(s == states[0] for s in states[1:]), \
             f"{label}: policies diverged"
         assert payload_by["bp+rr"] < payload_by["all"], (
-            f"{label}: bp+rr shipped {payload_by['bp+rr']} atoms, "
+            f"{label}: bp+rr shipped {payload_by['bp+rr']} frame bytes, "
             f"ship-all {payload_by['all']} — BP+RR must be strictly "
             f"smaller")
         rows.append((
             f"antientropy_policy_savings_{label}",
             payload_by["all"] - payload_by["bp+rr"],
             f"bp+rr={payload_by['bp+rr']} vs ship-all={payload_by['all']} "
-            f"atoms ({payload_by['bp+rr'] / payload_by['all']:.2f}x)"))
+            f"frame bytes ({payload_by['bp+rr'] / payload_by['all']:.2f}x)"))
     return rows
 
 

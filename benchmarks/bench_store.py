@@ -12,7 +12,9 @@ Two claims measured (and asserted — regressions fail the suite):
 2. **bytes shipped per anti-entropy round scale with *touched* keys, not
    store size** (under ``bp+rr``): a 3-replica causal mesh converges on a
    pre-populated store, then a workload touches T of the S keys; the
-   phase-2 payload is ~flat in S for fixed T and grows with T.
+   phase-2 payload is ~flat in S for fixed T and grows with T. The
+   replicas gossip binary δ-wire frames, so the byte column is measured
+   encoded-frame lengths.
 """
 
 from __future__ import annotations
@@ -86,16 +88,18 @@ def batched_join_rows(n_obj: int = 1024, n_tensors: int = 4,
 
 
 def _phase2_bytes(store_size: int, touched: int, seed: int = 5) -> int:
-    """Payload atoms shipped while propagating ops on ``touched`` of the
-    ``store_size`` keys, after the store has already converged."""
+    """Measured frame bytes shipped while propagating ops on ``touched``
+    of the ``store_size`` keys, after the store has already converged."""
     from repro.core import (GCounter, NetConfig, Simulator, StoreReplica,
                             converged, make_policy, run_to_convergence)
+    from repro.wire import WireCodec
+    wire = WireCodec()
     sim = Simulator(NetConfig(loss=0.05, dup=0.05, seed=seed))
     ids = [f"n{k}" for k in range(3)]
     nodes = [sim.add_node(StoreReplica(
         i, [j for j in ids if j != i], causal=True,
-        policy=make_policy("bp+rr"), rng=random.Random(seed + 1)))
-        for i in ids]
+        policy=make_policy("bp+rr"), rng=random.Random(seed + 1),
+        wire=wire)) for i in ids]
     rng = random.Random(seed + 2)
     for s in range(store_size):
         n = nodes[s % len(nodes)]
@@ -123,7 +127,7 @@ def sharded_bytes_rows() -> List[Tuple[str, float, str]]:
         fixed_t[size] = atoms
         rows.append((f"store_bytes_S{size}_T8",
                      (time.perf_counter() - t0) * 1e6,
-                     f"payload_atoms={atoms}"))
+                     f"frame_bytes={atoms}"))
     assert fixed_t[512] <= 2.5 * fixed_t[64], (
         f"bytes grew with store size at fixed touched keys: {fixed_t}")
     # fixed store, growing touched-key count: bytes must grow
@@ -134,7 +138,7 @@ def sharded_bytes_rows() -> List[Tuple[str, float, str]]:
         by_t[touched] = atoms
         rows.append((f"store_bytes_S256_T{touched}",
                      (time.perf_counter() - t0) * 1e6,
-                     f"payload_atoms={atoms}"))
+                     f"frame_bytes={atoms}"))
     assert by_t[4] < by_t[64], (
         f"bytes did not grow with touched keys: {by_t}")
     return rows

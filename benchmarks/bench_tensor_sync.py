@@ -2,7 +2,12 @@
 vs packed chunk deltas vs top-k+error-feedback — the framework-scale
 version of §9 — plus delta_join/chunk_digest throughput (jnp/XLA path; the
 Pallas kernel is the TPU build of the same op, validated in interpret
-mode in tests)."""
+mode in tests).
+
+Byte rows are **measured encoded-frame lengths** (`len(frame)` of the
+binary δ-wire encoding), not structural estimates; the sparse-ingest row
+times joining a decoded delta through the O(shipped-chunks) gather/
+scatter path against the legacy dense zero-padded materialization."""
 
 from __future__ import annotations
 
@@ -14,19 +19,46 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.tensor_lattice import (TensorState, chunk_tensor,
-                                       pack_delta, packed_size_bytes)
+                                       pack_delta, unpack_delta)
 from repro.kernels import ops
-from repro.sync.compression import (TopKCompressor, dense_nbytes,
-                                    sparse_nbytes)
+from repro.sync.compression import TopKCompressor, topk_frame
+from repro.wire import encode_frame, encode_value
 
 CHUNK = 4096
 
 
+def _frame_len(value, kind: str = "delta") -> int:
+    """Measured wire size of a lattice value as one encoded frame."""
+    return len(encode_frame(kind, encode_value(value)))
+
+
+def _block_state(state: TensorState) -> TensorState:
+    """Force any async jax work in a TensorState to finish (fair timing)."""
+    for _, ct in state.chunks:
+        for arr in ((ct.vals, ct.vers) if ct.is_sparse
+                    else (ct.values, ct.versions)):
+            ready = getattr(arr, "block_until_ready", None)
+            if ready is not None:
+                ready()
+    return state
+
+
+def _time_join(a: TensorState, b: TensorState, repeats: int = 3):
+    best = float("inf")
+    result = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        result = _block_state(a.join(b))
+        best = min(best, time.perf_counter() - t0)
+    return best, result
+
+
 def _model_state(n_params: int, seed=0):
     rng = np.random.default_rng(seed)
-    state = TensorState.bottom()
     w = rng.normal(size=(n_params,)).astype(np.float32)
-    ct = chunk_tensor(w, CHUNK)
+    # version 1: a fully-written resident state (version 0 would be ⊥
+    # everywhere and encode to an empty frame)
+    ct = chunk_tensor(w, CHUNK, version=1)
     state = TensorState.of({"w": ct})
     return state, w
 
@@ -35,10 +67,11 @@ def delta_ship_table() -> List[Tuple[str, float, str]]:
     rows = []
     n_params = 10_000_000
     state, w = _model_state(n_params)
-    dense_bytes = n_params * 4
 
-    # (a) full-state shipping (classical state-based CRDT)
-    rows.append(("tensor_full_state_10M", dense_bytes, "bytes/round"))
+    # (a) full-state shipping (classical state-based CRDT), measured
+    dense_bytes = _frame_len(state, kind="state")
+    rows.append(("tensor_full_state_10M", dense_bytes,
+                 "frame bytes/round (measured)"))
 
     # (b) chunk deltas — MoE-like round touching 2% of chunks
     n_chunks = state.as_dict()["w"].values.shape[0]
@@ -46,17 +79,51 @@ def delta_ship_table() -> List[Tuple[str, float, str]]:
     vals = np.random.default_rng(1).normal(
         size=(len(touched), CHUNK)).astype(np.float32)
     delta = state.write_delta(0, "w", vals, chunk_idx=touched)
-    wire = pack_delta(delta)
-    rows.append(("tensor_chunk_delta_2pct", packed_size_bytes(wire),
-                 f"ratio={dense_bytes / packed_size_bytes(wire):.1f}x"))
+    delta_bytes = _frame_len(delta)
+    rows.append(("tensor_chunk_delta_2pct", delta_bytes,
+                 f"ratio={dense_bytes / delta_bytes:.1f}x (measured frames)"))
 
-    # (c) dense round + top-k(1%) + error feedback
+    # (b') ingest cost: sparse decode + gather/scatter join vs the legacy
+    # densify round-trip (materialize full-size zero arrays, full-width
+    # LWW merge) — both paths start from the same packed wire message
+    wire = pack_delta(delta)
+    _block_state(state.join(unpack_delta(wire, sparse=False)))  # warm jit
+    t0 = time.perf_counter()
+    sparse_joined = _block_state(state.join(unpack_delta(wire)))
+    t_sparse = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    dense_joined = _block_state(state.join(unpack_delta(wire, sparse=False)))
+    t_dense = time.perf_counter() - t0
+    assert sparse_joined == dense_joined, "sparse ingest diverged"
+    rows.append(("tensor_sparse_ingest", t_sparse * 1e6,
+                 f"densify_path={t_dense * 1e6:.0f}us "
+                 f"({t_dense / max(t_sparse, 1e-9):.1f}x slower)"))
+
+    # (b'') delta-group aggregation: joining two sparse deltas is an
+    # O(rows) index union; the dense representation pays a full-width
+    # merge over every chunk — the buffer-interval hot path in the engine
+    d2 = state.join(delta).write_delta(
+        0, "w", np.ones((len(touched), CHUNK), np.float32),
+        chunk_idx=touched + 1)
+    sp1, sp2 = unpack_delta(pack_delta(delta)), unpack_delta(pack_delta(d2))
+    dn1 = unpack_delta(pack_delta(delta), sparse=False)
+    dn2 = unpack_delta(pack_delta(d2), sparse=False)
+    _block_state(dn1.join(dn2))                                 # warm jit
+    t_sp, sp_group = _time_join(sp1, sp2)
+    t_dn, dn_group = _time_join(dn1, dn2)
+    assert sp_group == dn_group, "sparse delta-group join diverged"
+    rows.append(("tensor_delta_group_sparse_join", t_sp * 1e6,
+                 f"dense_path={t_dn * 1e6:.0f}us "
+                 f"({t_dn / max(t_sp, 1e-9):.1f}x slower)"))
+
+    # (c) dense round + top-k(1%) + error feedback, framed
     comp = TopKCompressor(rate=0.01)
     upd = {"w": jnp.asarray(np.random.default_rng(2).normal(
         size=(n_params,)).astype(np.float32))}
     sp = comp.compress(upd)
-    rows.append(("tensor_topk1pct_delta", sparse_nbytes(sp),
-                 f"ratio={dense_bytes / sparse_nbytes(sp):.1f}x"))
+    topk_bytes = len(topk_frame(sp))
+    rows.append(("tensor_topk1pct_delta", topk_bytes,
+                 f"ratio={dense_bytes / topk_bytes:.1f}x (measured frame)"))
     return rows
 
 

@@ -11,6 +11,9 @@ Prints ``name,us_per_call,derived`` CSV:
   bench_kernels             kernel microbenchmarks (CPU proxies)
   bench_store               keyed LatticeStore: batched vs per-key join
                             throughput + sharded bytes-per-round scaling
+  bench_wire                binary δ-wire codec: sparse-round frame bytes
+                            vs dense full-state encoding + rebalance
+                            handoff vs organic anti-entropy
   bench_roofline            per-(arch × shape × mesh) roofline rows from
                             the dry-run artifacts (run dryrun first)
 
@@ -61,7 +64,7 @@ def main(argv=None) -> None:
 
     from . import (bench_antientropy, bench_kernels,
                    bench_message_complexity, bench_roofline, bench_store,
-                   bench_tensor_sync)
+                   bench_tensor_sync, bench_wire)
 
     modules = [
         ("message_complexity", bench_message_complexity),
@@ -69,6 +72,7 @@ def main(argv=None) -> None:
         ("tensor_sync", bench_tensor_sync),
         ("kernels", bench_kernels),
         ("store", bench_store),
+        ("wire", bench_wire),
         ("roofline", bench_roofline),
     ]
     if args.only:

@@ -53,12 +53,14 @@ class BasicNode(Replica):
     def __init__(self, node_id: str, bottom: Any, neighbors: Sequence[str],
                  transitive: bool = True,
                  ship_state_every: Optional[int] = None,
-                 policy: Optional[ShippingPolicy] = None):
+                 policy: Optional[ShippingPolicy] = None,
+                 wire: Optional[Any] = None):
         if policy is None:
             policy = (ShipStateEveryK(ship_state_every)
                       if ship_state_every else ShipAll())
         super().__init__(node_id, bottom, neighbors, causal=False,
-                         policy=policy, transitive=transitive, fanout=None)
+                         policy=policy, transitive=transitive, fanout=None,
+                         wire=wire)
         self.ship_state_every = ship_state_every
 
     # -- paper: chooseᵢ(Xᵢ, Dᵢ), kept for the paper correspondence -------------
@@ -86,10 +88,11 @@ class CausalNode(Replica):
                  rng: Optional[random.Random] = None,
                  ghost_check: bool = False,
                  fanout: int = 1,
-                 policy: Optional[ShippingPolicy] = None):
+                 policy: Optional[ShippingPolicy] = None,
+                 wire: Optional[Any] = None):
         super().__init__(node_id, bottom, neighbors, causal=True,
                          policy=policy, rng=rng, ghost_check=ghost_check,
-                         fanout=fanout)
+                         fanout=fanout, wire=wire)
 
 
 # ---------------------------------------------------------------------------
@@ -99,11 +102,13 @@ class CausalNode(Replica):
 class FullStateNode(Node):
     """Classical state-based CRDT anti-entropy: ship the entire state."""
 
-    def __init__(self, node_id: str, bottom: Any, neighbors: Sequence[str]):
+    def __init__(self, node_id: str, bottom: Any, neighbors: Sequence[str],
+                 wire: Optional[Any] = None):
         super().__init__(node_id)
         self.bottom = bottom
         self.X = bottom
         self.neighbors = list(neighbors)
+        self.wire = wire
 
     def operation(self, m_full: Callable[[Any], Any]) -> None:
         self.X = m_full(self.X)
@@ -112,9 +117,15 @@ class FullStateNode(Node):
         if not self.alive:
             return
         for j in self.neighbors:
-            self.send(j, ("state", self.X))
+            # WireCodec routes on the engine's "delta" tuple shape and
+            # tags the frame as state traffic via full_state
+            msg = (self.wire.encode_msg(("delta", self.X), full_state=True)
+                   if self.wire is not None else ("state", self.X))
+            self.send(j, msg)
 
     def on_receive(self, src: str, msg: Any) -> None:
+        if self.wire is not None and isinstance(msg, (bytes, bytearray)):
+            msg = self.wire.decode_msg(msg)
         _, s = msg
         self.X = self.X.join(s)
 

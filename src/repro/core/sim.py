@@ -33,10 +33,16 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 # ---------------------------------------------------------------------------
 
 def structural_size(x: Any) -> int:
-    """Number of atomic entries in a (nested) CRDT value / message."""
+    """Number of atomic entries in a (nested) CRDT value / message.
+
+    Encoded wire frames (bytes) are the exception: their size is not an
+    estimate but the measured frame length, so byte accounting under the
+    wire codec reports real bytes shipped."""
     if x is None:
         return 0
-    if isinstance(x, (int, float, str, bool, bytes)):
+    if isinstance(x, (bytes, bytearray)):
+        return len(x)
+    if isinstance(x, (int, float, str, bool)):
         return 1
     if isinstance(x, (list, tuple, set, frozenset)):
         return sum(structural_size(v) for v in x)
@@ -72,12 +78,16 @@ class NetStats:
         self.by_kind[kind] = self.by_kind.get(kind, 0) + 1
         self.bytes_by_kind[kind] = self.bytes_by_kind.get(kind, 0) + size
 
+    PAYLOAD_KINDS = ("delta", "state", "handoff", "membership")
+
     def payload_atoms(self) -> int:
-        """Structural size of all CRDT payload traffic (delta + state
-        messages; acks and other control traffic excluded) — the quantity
-        the §9 tables and the shipping-policy benchmarks compare."""
+        """Size of all CRDT payload traffic (delta / state / handoff /
+        membership messages; acks and other control traffic excluded) —
+        the quantity the §9 tables and the shipping-policy benchmarks
+        compare. Structural atoms for object messages; measured frame
+        bytes when replicas ship through the wire codec."""
         return sum(v for k, v in self.bytes_by_kind.items()
-                   if k in ("delta", "state"))
+                   if k in self.PAYLOAD_KINDS)
 
 
 class Node:
@@ -162,7 +172,11 @@ class Simulator:
 
     # -- transport ------------------------------------------------------------
     def send(self, src: str, dst: str, msg: Any) -> None:
-        kind = msg[0] if isinstance(msg, tuple) and msg else type(msg).__name__
+        # encoded frames carry their traffic class as a .kind attribute
+        kind = getattr(msg, "kind", None)
+        if kind is None:
+            kind = (msg[0] if isinstance(msg, tuple) and msg
+                    else type(msg).__name__)
         self.stats.record(str(kind), structural_size(msg))
         if self._partitioned(src, dst) or self.rng.random() < self.cfg.loss:
             self.stats.dropped += 1

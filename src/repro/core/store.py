@@ -196,6 +196,8 @@ def _both_tensorstates(a: Any, b: Any) -> bool:
 
 
 def _stackable(act, bct) -> bool:
+    if getattr(act, "is_sparse", False) or getattr(bct, "is_sparse", False):
+        return False    # sparse deltas join via the gather/scatter path
     return (act.values.shape == bct.values.shape
             and act.values.dtype == bct.values.dtype)
 
@@ -239,6 +241,9 @@ def _stack_store(store: LatticeStore):
         ok = True
         for key, val in store.entries:
             for name, ct in val.chunks:
+                if getattr(ct, "is_sparse", False):
+                    ok = False    # sparse rows are not a dense column block
+                    break
                 v, r = np.asarray(ct.values), np.asarray(ct.versions)
                 if chunkw is None:
                     chunkw, dtype, vdtype = v.shape[1], v.dtype, r.dtype

@@ -72,7 +72,15 @@ class ChunkedTensor:
     values: jax.Array    # [n_chunks, chunk_size]
     versions: jax.Array  # [n_chunks] int64
 
+    is_sparse = False
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return tuple(self.values.shape)
+
     def __eq__(self, other: object) -> bool:
+        if isinstance(other, SparseChunks):
+            return _pair_eq(self, other)
         if not isinstance(other, ChunkedTensor):
             return NotImplemented
         return (self.values.shape == other.values.shape
@@ -83,6 +91,203 @@ class ChunkedTensor:
 
     def __hash__(self):  # pragma: no cover
         raise TypeError("unhashable")
+
+
+@dataclass(frozen=True, eq=False)
+class SparseChunks:
+    """Sparse chunk-row set: the wire-decoded form of a tensor delta.
+
+    Holds only the shipped rows of a logically [n_chunks, chunk] versioned
+    tensor — ``idx`` are the chunk positions (sorted, unique), ``vals`` /
+    ``vers`` the corresponding rows; every unlisted chunk is ⊥. Decoded
+    frames keep their rows as zero-copy views into the frame buffer, and
+    joining a sparse delta into a dense resident tensor is a
+    gather → LWW-merge → scatter over the listed rows only — O(shipped
+    chunks), never a full-size zero-padded materialization.
+    """
+
+    n_chunks: int
+    idx: np.ndarray    # [rows] chunk positions, sorted strictly increasing
+    vals: np.ndarray   # [rows, chunk]
+    vers: np.ndarray   # [rows]
+
+    is_sparse = True
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.n_chunks, int(self.vals.shape[1]))
+
+    def to_dense(self) -> ChunkedTensor:
+        """Materialize the full [n_chunks, chunk] tensor (⊥ elsewhere),
+        cached — the fallback for dense-only consumers (digest ranking,
+        unchunk, checkpointing); the join/leq/eq hot paths never call
+        this. A decoded value can become durable resident state (a key
+        the replica never writes locally is taken wholesale by the
+        join), so dense accessors must work, not crash."""
+        cached = self.__dict__.get("_dense_cache")
+        if cached is None:
+            vals = np.zeros((self.n_chunks, self.vals.shape[1]),
+                            dtype=self.vals.dtype)
+            vers = np.zeros((self.n_chunks,),
+                            dtype=np.asarray(self.vers).dtype)
+            if self.idx.size:
+                vals[self.idx] = self.vals
+                vers[self.idx] = self.vers
+            cached = ChunkedTensor(vals, vers)
+            object.__setattr__(self, "_dense_cache", cached)
+        return cached
+
+    @property
+    def values(self):
+        """Dense [n_chunks, chunk] view (lazily materialized) — lets
+        dense-only consumers treat any chunk tensor uniformly."""
+        return self.to_dense().values
+
+    @property
+    def versions(self):
+        return self.to_dense().versions
+
+    def __eq__(self, other: object) -> bool:
+        if isinstance(other, (ChunkedTensor, SparseChunks)):
+            return _pair_eq(self, other)
+        return NotImplemented
+
+    def __hash__(self):  # pragma: no cover
+        raise TypeError("unhashable")
+
+
+def sparse_chunks(n_chunks: int, idx, vals, vers) -> SparseChunks:
+    """Construct a :class:`SparseChunks`, normalizing to sorted-unique
+    row order (the codec emits sorted rows; ad-hoc callers may not).
+    Duplicate chunk positions keep the highest-versioned row — LWW, the
+    same rule the join applies."""
+    idx = np.asarray(idx)
+    vals = np.asarray(vals)
+    vers = np.asarray(vers)
+    if idx.size and not bool(np.all(idx[1:] > idx[:-1])):
+        order = np.lexsort((vers, idx))     # by position, version asc
+        idx, vals, vers = idx[order], vals[order], vers[order]
+        last = np.r_[idx[1:] != idx[:-1], True]
+        if not bool(last.all()):
+            idx, vals, vers = idx[last], vals[last], vers[last]
+    return SparseChunks(int(n_chunks), idx, vals, vers)
+
+
+def _max_version(ct) -> int:
+    """Largest version held by a dense or sparse chunk tensor (0 == ⊥)."""
+    if ct.is_sparse:
+        return int(np.max(np.asarray(ct.vers))) if ct.idx.size else 0
+    return int(jnp.max(ct.versions)) if ct.versions.shape[0] else 0
+
+
+def _join_dense_sparse(dense: ChunkedTensor,
+                       sp: SparseChunks) -> ChunkedTensor:
+    """Join a sparse delta into a dense tensor: gather the resident rows
+    at the shipped positions, keep the higher-versioned side, scatter the
+    winners back — O(shipped rows) work plus one buffer copy."""
+    if sp.idx.size == 0:
+        return dense
+    dv = np.asarray(dense.values)
+    dr = np.asarray(dense.versions)
+    take = np.asarray(sp.vers) > dr[sp.idx]
+    if not bool(take.any()):
+        return dense
+    rows = sp.idx[take]
+    out_v = np.array(dv, copy=True)
+    out_r = np.array(dr, copy=True)
+    out_v[rows] = np.asarray(sp.vals)[take]
+    out_r[rows] = np.asarray(sp.vers)[take]
+    return ChunkedTensor(out_v, out_r)
+
+
+def _join_sparse_sparse(a: SparseChunks, b: SparseChunks) -> SparseChunks:
+    """Union of two sparse row sets; overlapping positions keep the higher
+    version (ties carry identical values by unique-write construction)."""
+    if a.idx.size == 0:
+        return b
+    if b.idx.size == 0:
+        return a
+    idx = np.concatenate([np.asarray(a.idx), np.asarray(b.idx)])
+    vers = np.concatenate([np.asarray(a.vers), np.asarray(b.vers)])
+    vals = np.concatenate([np.asarray(a.vals), np.asarray(b.vals)], axis=0)
+    order = np.lexsort((vers, idx))          # by position, version ascending
+    idx, vers, vals = idx[order], vers[order], vals[order]
+    last = np.r_[idx[1:] != idx[:-1], True]  # max-version row per position
+    return SparseChunks(a.n_chunks, idx[last], vals[last], vers[last])
+
+
+def _pair_join(a, b):
+    """Join two chunk tensors of any density mix."""
+    if not a.is_sparse and not b.is_sparse:
+        v, vers = _join_chunked(a.values, a.versions, b.values, b.versions)
+        return ChunkedTensor(v, vers)
+    if a.is_sparse and b.is_sparse:
+        return _join_sparse_sparse(a, b)
+    return (_join_dense_sparse(b, a) if a.is_sparse
+            else _join_dense_sparse(a, b))
+
+
+def _pair_leq(a, b) -> bool:
+    """Pointwise version order over any density mix (O(sparse rows))."""
+    if not a.is_sparse and not b.is_sparse:
+        return not bool(jnp.any(a.versions > b.versions))
+    if a.is_sparse and not b.is_sparse:
+        if a.idx.size == 0:
+            return True
+        return not bool(np.any(np.asarray(a.vers)
+                               > np.asarray(b.versions)[a.idx]))
+    if not a.is_sparse and b.is_sparse:
+        av = np.asarray(a.versions)
+        live_outside = av > 0
+        if b.idx.size:
+            live_outside = np.array(live_outside, copy=True)
+            live_outside[b.idx] = False
+            if bool(np.any(av[b.idx] > np.asarray(b.vers))):
+                return False
+        return not bool(live_outside.any())
+    # sparse ≤ sparse: every live row of a must be covered by b
+    live = np.asarray(a.vers) > 0
+    ai, avr = a.idx[live], np.asarray(a.vers)[live]
+    if ai.size == 0:
+        return True
+    if b.idx.size == 0:
+        return False
+    pos = np.searchsorted(np.asarray(b.idx), ai)
+    pos_c = np.minimum(pos, b.idx.size - 1)
+    found = (pos < b.idx.size) & (np.asarray(b.idx)[pos_c] == ai)
+    if not bool(found.all()):
+        return False
+    return not bool(np.any(avr > np.asarray(b.vers)[pos_c]))
+
+
+def _sp_live(sp: SparseChunks):
+    live = np.asarray(sp.vers) > 0
+    return sp.idx[live], np.asarray(sp.vals)[live], np.asarray(sp.vers)[live]
+
+
+def _pair_eq(a, b) -> bool:
+    """Value equality over any density mix. Relies on the ⊥ invariant
+    (version 0 ⇒ zero values), which every constructor maintains."""
+    if a.shape != b.shape:
+        return False
+    if not a.is_sparse and not b.is_sparse:
+        return a == b
+    if a.is_sparse and b.is_sparse:
+        ai, av, ar = _sp_live(a)
+        bi, bv, br = _sp_live(b)
+        return (np.array_equal(ai, bi) and np.array_equal(ar, br)
+                and np.array_equal(av, bv))
+    dense, sp = (b, a) if a.is_sparse else (a, b)
+    dv, dr = np.asarray(dense.values), np.asarray(dense.versions)
+    si, sv, sr = _sp_live(sp)
+    dense_vers = np.zeros_like(dr)
+    dense_vers[si] = sr
+    if not np.array_equal(dr, dense_vers):
+        return False
+    if si.size and not np.array_equal(dv[si], sv):
+        return False
+    # unlisted rows are ⊥ on both sides (invariant: version 0 ⇒ zeros)
+    return True
 
 
 def _join_chunked_impl(av, avers, bv, bvers):
@@ -143,26 +348,24 @@ class TensorState:
     # -- lattice ----------------------------------------------------------------
     def join(self, other: "TensorState") -> "TensorState":
         a, b = self.as_dict(), other.as_dict()
-        out: Dict[str, ChunkedTensor] = {}
+        out: Dict[str, Any] = {}
         for k in set(a) | set(b):
             if k not in a:
                 out[k] = b[k]
             elif k not in b:
                 out[k] = a[k]
             else:
-                v, vers = _join_chunked(a[k].values, a[k].versions,
-                                        b[k].values, b[k].versions)
-                out[k] = ChunkedTensor(v, vers)
+                out[k] = _pair_join(a[k], b[k])
         return TensorState.of(out, max(self.lamport, other.lamport))
 
     def leq(self, other: "TensorState") -> bool:
         a, b = self.as_dict(), other.as_dict()
         for k, ct in a.items():
             if k not in b:
-                if int(jnp.max(ct.versions)) > 0:
+                if _max_version(ct) > 0:
                     return False
                 continue
-            if bool(jnp.any(ct.versions > b[k].versions)):
+            if not _pair_leq(ct, b[k]):
                 return False
             # equal versions ⇒ equal values by construction (unique writes)
         return True
@@ -176,10 +379,10 @@ class TensorState:
             if k not in a or k not in b:
                 # missing key is equal to an all-⊥ tensor of the same shape
                 present = a.get(k, b.get(k))
-                if int(jnp.max(present.versions)) > 0:
+                if _max_version(present) > 0:
                     return False
                 continue
-            if a[k] != b[k]:
+            if not _pair_eq(a[k], b[k]):
                 return False
         return True
 
@@ -207,6 +410,8 @@ class TensorState:
                                              dtype=VERSION_DTYPE)
             delta_ct = ChunkedTensor(vals, vers)
         else:
+            if cur.is_sparse:   # writes need the dense addressing space
+                cur = cur.to_dense()
             n_chunks, csz = cur.values.shape
             if chunk_idx is None:
                 ct = chunk_tensor(np.asarray(new_values), csz)
@@ -254,6 +459,8 @@ def digest_keep_plan(tensors, budget_bytes: int, interpret: bool = True):
 
     candidates = []   # (neg_energy, scope, name, chunk_idx, chunk_bytes)
     for scope, name, ct in tensors:
+        if ct.is_sparse:        # the digest ranks dense chunk positions
+            ct = ct.to_dense()
         vers = np.asarray(ct.versions)
         live = vers > 0
         if not live.any():
@@ -279,10 +486,12 @@ def digest_keep_plan(tensors, budget_bytes: int, interpret: bool = True):
     return keep
 
 
-def mask_kept_chunks(ct: ChunkedTensor, idx) -> ChunkedTensor:
+def mask_kept_chunks(ct, idx) -> ChunkedTensor:
     """Drop every chunk not in ``idx`` to ⊥ (version 0, zero values), so
     the result is ≤ the input in the lattice order and always safe to
     join."""
+    if ct.is_sparse:
+        ct = ct.to_dense()
     mask = np.zeros((ct.values.shape[0],), dtype=bool)
     mask[np.asarray(idx)] = True
     m = jnp.asarray(mask)
@@ -317,6 +526,17 @@ def pack_delta(delta: TensorState,
     §4.1 ``size(mᵟ(X)) ≪ size(X)`` payload."""
     out: Dict[str, Any] = {"lamport": delta.lamport, "tensors": {}}
     for name, ct in delta.chunks:
+        if ct.is_sparse:
+            row_idx, vals, vers = _sp_live(ct)
+            shape = ct.shape
+            if known_versions and name in known_versions:
+                keep = vers > np.asarray(known_versions[name])[row_idx]
+                row_idx, vals, vers = row_idx[keep], vals[keep], vers[keep]
+            if len(row_idx) == 0:
+                continue
+            out["tensors"][name] = (np.asarray(row_idx, dtype=np.int32),
+                                    vals, vers, shape)
+            continue
         vers = np.asarray(ct.versions)
         mask = vers > 0
         if known_versions and name in known_versions:
@@ -333,9 +553,19 @@ def pack_delta(delta: TensorState,
     return out
 
 
-def unpack_delta(wire: Dict[str, Any]) -> TensorState:
-    chunks: Dict[str, ChunkedTensor] = {}
+def unpack_delta(wire: Dict[str, Any], *, sparse: bool = True) -> TensorState:
+    """Decode a :func:`pack_delta` message.
+
+    ``sparse=True`` (default) keeps each tensor as a :class:`SparseChunks`
+    row set — joining it into resident state is a gather/merge/scatter
+    over the shipped rows only, so ingest costs O(shipped chunks).
+    ``sparse=False`` restores the legacy behavior of materializing
+    full-size zero-padded tensors (kept for dense-only consumers)."""
+    chunks: Dict[str, Any] = {}
     for name, (idx, vals, vers, shape) in wire["tensors"].items():
+        if sparse:
+            chunks[name] = sparse_chunks(shape[0], idx, vals, vers)
+            continue
         dense_v = np.zeros(shape, dtype=vals.dtype)
         dense_ver = np.zeros((shape[0],), dtype=np.int64)
         dense_v[idx] = vals

@@ -60,6 +60,11 @@ def main() -> None:
                          "implies 3 gateways unless --replicate is set)")
     ap.add_argument("--session-replication", type=int, default=2,
                     help="replicas per session key under --sessions")
+    ap.add_argument("--no-wire", dest="wire", action="store_false",
+                    help="gossip Python objects instead of binary δ-wire "
+                         "frames (frames are the default: gateways move "
+                         "bytes, and reported traffic is measured frame "
+                         "lengths)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
@@ -129,12 +134,14 @@ def main() -> None:
 def _replicated_sessions(args, b: int) -> None:
     """Session table as ORMap(request → LWW status) across gateways,
     gossiped by the unified propagation runtime under --ship-policy."""
+    wire = _wire_codec(args)
     sim = Simulator(NetConfig(loss=0.25, dup=0.1, seed=args.seed))
     ids = [f"gw{k}" for k in range(args.replicate)]
     nodes = [sim.add_node(Replica(i, ORMap.bottom(),
                                   [j for j in ids if j != i], causal=True,
                                   policy=make_policy(args.ship_policy),
-                                  rng=random.Random(args.seed + k)))
+                                  rng=random.Random(args.seed + k),
+                                  wire=wire))
              for k, i in enumerate(ids)]
     for r in range(b):
         gw = nodes[r % len(nodes)]   # each request owned by one gateway →
@@ -149,10 +156,19 @@ def _replicated_sessions(args, b: int) -> None:
     statuses = {k: next(iter(table.get_value(k, MVRegister).read()))
                 for k in sorted(table.keys())}
     payload = sim.stats.payload_atoms()
+    unit = "frame_bytes" if wire is not None else "payload_atoms"
     print(f"  [δ-CRDT] session table replicated over {args.replicate} "
           f"gateways (25% loss, policy={args.ship_policy}, "
-          f"payload_atoms={payload}): {statuses}")
+          f"{unit}={payload}): {statuses}")
     assert all(v == "done" for v in statuses.values())
+
+
+def _wire_codec(args):
+    """The binary frame codec gateways gossip through (None = objects)."""
+    if not args.wire:
+        return None
+    from repro.wire import WireCodec
+    return WireCodec()
 
 
 def _keyed_sessions(args) -> None:
@@ -161,6 +177,7 @@ def _keyed_sessions(args) -> None:
     the gateways that replicate it."""
     from repro.sync import KeyOwnership, ShardByKey
 
+    wire = _wire_codec(args)
     n_gw = max(args.replicate, 2) if args.replicate else 3
     ids = [f"gw{k}" for k in range(n_gw)]
     ownership = KeyOwnership(ids, replication=min(args.session_replication,
@@ -169,7 +186,7 @@ def _keyed_sessions(args) -> None:
     nodes = [sim.add_node(StoreReplica(
         i, [j for j in ids if j != i], causal=True,
         policy=Compose(make_policy(args.ship_policy), ShardByKey(ownership)),
-        rng=random.Random(args.seed + k), ownership=ownership))
+        rng=random.Random(args.seed + k), ownership=ownership, wire=wire))
         for k, i in enumerate(ids)]
 
     # gossip runs concurrently with ingest: register the periodic
@@ -210,11 +227,13 @@ def _keyed_sessions(args) -> None:
     payload = sim.stats.payload_atoms()
     per_gw = {i: len([k for k in keys if ownership.replicates(i, k)])
               for i in ids}
+    unit = "frame_bytes" if wire is not None else "payload_atoms"
     print(f"  [δ-CRDT store] {args.sessions} sessions sharded over "
           f"{n_gw} gateways (replication={ownership.replication}, 25% loss, "
-          f"policy={args.ship_policy}+shard): all owner replicas settled "
-          f"to 'done'")
-    print(f"    keys per gateway: {per_gw}   payload_atoms={payload}")
+          f"policy={args.ship_policy}+shard"
+          f"{', binary δ-wire frames' if wire is not None else ''}): "
+          f"all owner replicas settled to 'done'")
+    print(f"    keys per gateway: {per_gw}   {unit}={payload}")
 
 
 if __name__ == "__main__":

@@ -23,16 +23,19 @@ slow, lossy, partition-prone and membership is elastic — replication is
                       monotone entries; PN counters).
 """
 
-from .compression import TopKCompressor, sparse_nbytes
+from .compression import (TopKCompressor, sparse_nbytes, topk_frame,
+                          topk_unframe)
 from .localsgd import DeltaSyncPod, OuterParams
 from .membership import (ClusterReplica, ClusterState, KeyOwnership,
-                         Membership, ShardByKey, owners_for_key,
-                         rendezvous_score)
+                         Membership, RebalanceHandoff, ShardByKey,
+                         owners_for_key, rendezvous_score)
 from .metrics import Metrics, MetricsState
 
 __all__ = [
-    "TopKCompressor", "sparse_nbytes", "DeltaSyncPod", "OuterParams",
+    "TopKCompressor", "sparse_nbytes", "topk_frame", "topk_unframe",
+    "DeltaSyncPod", "OuterParams",
     "ClusterReplica", "ClusterState", "KeyOwnership", "Membership",
-    "ShardByKey", "owners_for_key", "rendezvous_score", "Metrics",
+    "RebalanceHandoff", "ShardByKey", "owners_for_key",
+    "rendezvous_score", "Metrics",
     "MetricsState",
 ]

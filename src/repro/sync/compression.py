@@ -76,6 +76,29 @@ class TopKCompressor:
             one, sparse, is_leaf=lambda t: isinstance(t, dict) and "idx" in t)
 
 
+def topk_frame(sparse: Any) -> bytes:
+    """Encode a :meth:`TopKCompressor.compress` result as one ``topk``
+    wire frame (raw index/value columns + a tiny pickled treedef — see
+    ``repro.wire.codec.encode_topk``). ``len(frame)`` is the measured
+    wire size the benchmarks report — the estimate
+    :func:`sparse_nbytes` kept missing framing, dtype, and shape
+    overhead."""
+    from ..wire import encode_frame, encode_topk
+
+    return encode_frame("topk", encode_topk(sparse))
+
+
+def topk_unframe(frame) -> Any:
+    """Decode a ``topk`` frame back to the sparse pytree
+    (:meth:`TopKCompressor.decompress`-ready)."""
+    from ..wire import FrameError, decode_frame, decode_topk
+
+    kind, payload = decode_frame(frame)
+    if kind != "topk":
+        raise FrameError(f"expected a topk frame, got {kind!r}")
+    return decode_topk(payload)
+
+
 def sparse_nbytes(sparse: Any) -> int:
     total = 0
     for leaf in jax.tree_util.tree_leaves(

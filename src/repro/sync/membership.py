@@ -249,6 +249,76 @@ class ShardByKey(ShippingPolicy):
             return payload
         return payload.restrict(self._dst_keys(dst, payload))
 
+    def credit(self, replica, dst, delta):
+        """Unlike BP/RR, this policy withholds state the receiver does
+        NOT hold (keys outside its shard), so acked buffered entries may
+        only be credited to the receiver's known-state bound after the
+        same restriction — otherwise keys that later move into the shard
+        look 'already delivered' and RR trims them out of the full-state
+        fallback forever."""
+        if not isinstance(delta, LatticeStore):
+            return delta
+        return delta.restrict(self._dst_keys(dst, delta))
+
+
+class RebalanceHandoff:
+    """Rebalance-aware handoff: push moved keys instead of waiting.
+
+    When the live worker set changes, rendezvous hashing moves ~1/n of
+    the keyspace to new owners. Organic anti-entropy eventually delivers
+    those keys (``ShardByKey`` starts routing them on the next rounds),
+    but a fresh owner serves ⊥ until its first delta-interval lands —
+    and under ``bp+rr`` a long-converged key generates no new deltas at
+    all until someone writes it, so the wait is unbounded. This agent
+    closes the gap: it watches the ownership's worker set, and on a
+    change each **old** owner immediately pushes every moved key's
+    full-state delta to each **new** owner it gained (a ``handoff``
+    frame under the wire codec). The push is a plain join — idempotent,
+    unacked, safe under loss/duplication — so organic anti-entropy
+    remains the convergence safety net and the merging condition is
+    untouched (handoffs bypass the interval machinery entirely on the
+    send side; the receiver buffers them like any received delta so it
+    can forward).
+
+    Call :meth:`check` after membership events (or periodically — it is
+    a no-op while the worker set is stable). Keys are batched per
+    destination into ONE store payload per push.
+    """
+
+    def __init__(self, replica: Replica, ownership: KeyOwnership):
+        self.replica = replica
+        self.ownership = ownership
+        self._workers: Tuple[ReplicaId, ...] = ownership.workers()
+
+    def check(self) -> int:
+        """Detect a worker-set change and push moved keys; returns the
+        number of handoff messages sent."""
+        cur = self.ownership.workers()
+        if cur == self._workers:
+            return 0
+        prev, self._workers = self._workers, cur
+        store = self.replica.X
+        if not isinstance(store, LatticeStore):
+            return 0
+        # receiver-state bounds were derived under the old shard map;
+        # dropping them is always sound (an under-approximation may only
+        # shrink — RR briefly trims less). _inflight is kept: it records
+        # the exact payloads that were shipped, which is precisely what
+        # acks in flight across the change should credit.
+        self.replica._known.clear()
+        by_dst: Dict[ReplicaId, list] = {}
+        for key in store.keys():
+            old = (owners_for_key(key, prev, self.ownership.replication)
+                   if prev else ())
+            if self.replica.id not in old:
+                continue              # only a key's old owners push it
+            for dst in self.ownership.owners(key):
+                if dst not in old and dst != self.replica.id:
+                    by_dst.setdefault(dst, []).append(key)
+        for dst, keys in by_dst.items():
+            self.replica.push_handoff(dst, store.restrict(keys))
+        return len(by_dst)
+
 
 class ClusterReplica(Replica):
     """One pod's cluster-view replica on the unified propagation runtime:
@@ -261,9 +331,10 @@ class ClusterReplica(Replica):
     def __init__(self, node_id: ReplicaId, neighbors: Sequence[ReplicaId],
                  *, policy: Optional[ShippingPolicy] = None,
                  rng: Optional[random.Random] = None,
-                 timeout: float = 30.0, evict_after: float = 90.0):
+                 timeout: float = 30.0, evict_after: float = 90.0,
+                 wire: Optional[object] = None):
         super().__init__(node_id, ClusterState.bottom(), neighbors,
-                         causal=True, policy=policy, rng=rng)
+                         causal=True, policy=policy, rng=rng, wire=wire)
         self.agent = Membership(node_id, timeout=timeout,
                                 evict_after=evict_after)
 

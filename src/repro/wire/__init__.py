@@ -1,0 +1,37 @@
+"""Binary δ-wire subsystem: what actually crosses the network.
+
+The paper's bandwidth argument — ``size(mᵟ(X)) ≪ size(X)`` — only pays
+off if the transport realizes it in bytes. This package is that
+transport layer:
+
+* ``frames``  — versioned, CRC-checksummed typed envelopes for every
+                payload kind the propagation engine ships (delta
+                intervals, full states, acks, digest summaries,
+                membership gossip, rebalance handoffs, top-k updates),
+                plus :class:`WireCodec`, the engine-pluggable message
+                codec (``Replica(wire=WireCodec())``).
+* ``codec``   — the stacked store codec: one payload per store delta,
+                live chunk rows of all keys grouped by (chunk-width,
+                dtype) signature into stacked columns with a columnar
+                (key, tensor, chunk-index, version) index; decoding
+                yields zero-copy sparse row views that join into
+                resident state in O(shipped chunks).
+
+Byte accounting becomes measurement: an encoded frame *is* the wire
+message, so every benchmark byte report is ``len(frame)``.
+"""
+
+from .codec import (decode_digest, decode_store, decode_topk,
+                    decode_value, encode_digest, encode_store,
+                    encode_topk, encode_value)
+from .frames import (FRAME_KINDS, FrameBytes, FrameError, HEADER_SIZE,
+                     MAGIC, VERSION, WireCodec, decode_frame, encode_frame,
+                     peek_kind)
+
+__all__ = [
+    "decode_digest", "decode_store", "decode_topk", "decode_value",
+    "encode_digest", "encode_store", "encode_topk", "encode_value",
+    "FRAME_KINDS", "FrameBytes", "FrameError", "HEADER_SIZE",
+    "MAGIC", "VERSION", "WireCodec", "decode_frame", "encode_frame",
+    "peek_kind",
+]

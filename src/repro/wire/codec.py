@@ -1,0 +1,375 @@
+"""Stacked binary codec for :class:`~repro.core.store.LatticeStore` deltas.
+
+One store delta — any subset of keys, each holding any lattice value —
+packs into one contiguous byte payload:
+
+* Every ``TensorState`` chunk tensor contributes only its **live** rows
+  (version > 0; a delta's untouched chunks are ⊥ and never ship). Rows
+  from *all* keys and tensors are grouped by ``(chunk-width, value-dtype,
+  version-dtype)`` signature and laid out as one stacked values column +
+  one versions column + one chunk-index column per group — the same
+  signature grouping ``kernels.ops.batched_delta_join`` launches over, so
+  a receiver's columnar ingest sees data already in launch order.
+* A columnar index maps rows back to tensors: a key table, a tensor
+  descriptor table ``(key, name, n_chunks)``, and per group a
+  ``(descriptor, row-count)`` run-length list (rows of one tensor are
+  contiguous and sorted by chunk position).
+* Non-tensor lattice values (counters, OR-Sets, registers, membership
+  views, dot stores, …) ride as tagged opaque bodies per key.
+
+Decoding is **zero-copy for the columns**: each tensor comes back as a
+:class:`~repro.core.tensor_lattice.SparseChunks` whose ``idx``/``vals``/
+``vers`` arrays are views into the frame buffer. Joining the decoded
+store into resident state gathers, LWW-merges, and scatters only the
+listed rows — ingest is O(shipped chunks), with no full-size zero-padded
+densification round-trip (the cost :func:`tensor_lattice.unpack_delta`
+used to pay).
+
+Format versioning rides in the frame header (:mod:`repro.wire.frames`);
+this module only ever sees validated payloads.
+"""
+
+from __future__ import annotations
+
+import pickle
+import struct
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
+
+from ..core.store import LatticeStore
+from ..core.tensor_lattice import SparseChunks, TensorState, _sp_live
+
+_U8 = struct.Struct("<B")
+_U16 = struct.Struct("<H")
+_U32 = struct.Struct("<I")
+_U64 = struct.Struct("<Q")
+_II = struct.Struct("<II")
+
+_KIND_TENSOR = 0
+_KIND_OPAQUE = 1
+
+# payload tags for encode_value/decode_value
+_TAG_STORE = 0
+_TAG_TENSORSTATE = 1
+_TAG_OPAQUE = 2
+
+_SINGLE = "\x00single"    # wrapper key for bare-TensorState payloads
+
+
+def _pad8(buf: bytearray) -> None:
+    buf.extend(b"\x00" * ((-len(buf)) % 8))
+
+
+def _put_str(buf: bytearray, s: str, width=_U16) -> None:
+    raw = s.encode("utf-8")
+    buf += width.pack(len(raw))
+    buf += raw
+
+
+class _Cursor:
+    """Sequential reader over a memoryview with aligned array views."""
+
+    __slots__ = ("buf", "off")
+
+    def __init__(self, buf):
+        self.buf = memoryview(buf)
+        self.off = 0
+
+    def unpack(self, st: struct.Struct):
+        vals = st.unpack_from(self.buf, self.off)
+        self.off += st.size
+        return vals if len(vals) > 1 else vals[0]
+
+    def get_str(self, width=_U16) -> str:
+        n = self.unpack(width)
+        s = bytes(self.buf[self.off:self.off + n]).decode("utf-8")
+        self.off += n
+        return s
+
+    def get_blob(self) -> memoryview:
+        n = self.unpack(_U32)
+        blob = self.buf[self.off:self.off + n]
+        self.off += n
+        return blob
+
+    def align8(self) -> None:
+        self.off += (-self.off) % 8
+
+    def array(self, dtype, count: int, shape=None) -> np.ndarray:
+        self.align8()
+        dt = np.dtype(dtype)
+        arr = np.frombuffer(self.buf, dtype=dt, count=count, offset=self.off)
+        self.off += count * dt.itemsize
+        return arr.reshape(shape) if shape is not None else arr
+
+
+def _live_rows(ct) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(chunk positions, values rows, versions) of a tensor's live chunks,
+    sorted by position — directly from sparse row sets, by mask for dense."""
+    if ct.is_sparse:
+        idx, vals, vers = _sp_live(ct)
+        return np.asarray(idx, dtype=np.int32), vals, vers
+    vers = np.asarray(ct.versions)
+    mask = vers > 0
+    idx = np.nonzero(mask)[0].astype(np.int32)
+    return idx, np.asarray(ct.values)[idx], vers[idx]
+
+
+def encode_store(store: LatticeStore) -> bytes:
+    """Pack a whole store delta into one stacked, columnar byte payload."""
+    out = bytearray()
+    entries = store.entries
+
+    # -- key table ------------------------------------------------------------
+    out += _U32.pack(len(entries))
+    tensor_descs: List[Tuple[int, str, Any]] = []   # (key_i, name, ct)
+    opaque: List[Tuple[int, Any]] = []
+    for key_i, (key, val) in enumerate(entries):
+        _put_str(out, key)
+        if isinstance(val, TensorState):
+            out += bytes([_KIND_TENSOR])
+            out += _U64.pack(int(val.lamport))
+            for name, ct in val.chunks:
+                tensor_descs.append((key_i, name, ct))
+        else:
+            out += bytes([_KIND_OPAQUE])
+            opaque.append((key_i, val))
+
+    # -- opaque bodies ----------------------------------------------------------
+    out += _U32.pack(len(opaque))
+    for key_i, val in opaque:
+        blob = pickle.dumps(val, protocol=4)
+        out += _U32.pack(key_i)
+        out += _U32.pack(len(blob))
+        out += blob
+
+    # -- tensor descriptors -------------------------------------------------------
+    out += _U32.pack(len(tensor_descs))
+    for key_i, name, ct in tensor_descs:
+        out += _U32.pack(key_i)
+        _put_str(out, name)
+        out += _U32.pack(int(ct.shape[0]))
+
+    # -- signature groups: stacked columns ----------------------------------------
+    groups: Dict[Tuple[int, str, str], List[int]] = {}
+    rows_by_desc: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+    for desc_i, (_, _, ct) in enumerate(tensor_descs):
+        idx, vals, vers = _live_rows(ct)
+        rows_by_desc.append((idx, vals, vers))
+        sig = (int(ct.shape[1]), np.dtype(vals.dtype).str,
+               np.dtype(vers.dtype).str)
+        groups.setdefault(sig, []).append(desc_i)
+
+    out += _U16.pack(len(groups))
+    for (chunk_w, dstr, vstr), members in sorted(groups.items()):
+        _put_str(out, dstr, width=_U16)
+        _put_str(out, vstr, width=_U16)
+        out += _U32.pack(chunk_w)
+        out += _U32.pack(len(members))
+        total = 0
+        for desc_i in members:
+            rows = int(rows_by_desc[desc_i][0].shape[0])
+            out += _U32.pack(desc_i)
+            out += _U32.pack(rows)
+            total += rows
+        out += _U32.pack(total)
+        _pad8(out)
+        for desc_i in members:                       # chunk-index column
+            out += np.ascontiguousarray(
+                rows_by_desc[desc_i][0], dtype=np.int32).tobytes()
+        _pad8(out)
+        for desc_i in members:                       # versions column
+            out += np.ascontiguousarray(rows_by_desc[desc_i][2]).tobytes()
+        _pad8(out)
+        for desc_i in members:                       # stacked values column
+            out += np.ascontiguousarray(rows_by_desc[desc_i][1]).tobytes()
+        _pad8(out)
+    return bytes(out)
+
+
+def decode_store(buf) -> LatticeStore:
+    """Open a stacked payload back into a :class:`LatticeStore`.
+
+    Tensor values come back as :class:`SparseChunks` whose columns are
+    zero-copy views into ``buf`` — hand the result straight to
+    ``resident.join(decoded)`` and the store's join dispatches every
+    tensor through the O(shipped-rows) gather/merge/scatter path.
+    """
+    cur = _Cursor(buf)
+    n_keys = cur.unpack(_U32)
+    keys: List[str] = []
+    kinds: List[int] = []
+    lamports: List[int] = []
+    for _ in range(n_keys):
+        keys.append(cur.get_str())
+        kind = cur.unpack(_U8)
+        kinds.append(kind)
+        lamports.append(cur.unpack(_U64) if kind == _KIND_TENSOR else 0)
+
+    values: Dict[int, Any] = {}
+    tensor_chunks: Dict[int, Dict[str, Any]] = {
+        i: {} for i, k in enumerate(kinds) if k == _KIND_TENSOR}
+
+    n_opaque = cur.unpack(_U32)
+    for _ in range(n_opaque):
+        key_i = cur.unpack(_U32)
+        values[key_i] = pickle.loads(cur.get_blob())
+
+    n_descs = cur.unpack(_U32)
+    descs: List[Tuple[int, str, int]] = []
+    for _ in range(n_descs):
+        key_i = cur.unpack(_U32)
+        name = cur.get_str()
+        n_chunks = cur.unpack(_U32)
+        descs.append((key_i, name, n_chunks))
+
+    n_groups = cur.unpack(_U16)
+    for _ in range(n_groups):
+        dstr = cur.get_str(width=_U16)
+        vstr = cur.get_str(width=_U16)
+        chunk_w = cur.unpack(_U32)
+        n_members = cur.unpack(_U32)
+        members = [cur.unpack(_II) for _ in range(n_members)]
+        total = cur.unpack(_U32)
+        idx_col = cur.array(np.int32, total)
+        vers_col = cur.array(np.dtype(vstr), total)
+        vals_col = cur.array(np.dtype(dstr), total * chunk_w,
+                             shape=(total, chunk_w))
+        row = 0
+        for desc_i, rows in members:
+            key_i, name, n_chunks = descs[desc_i]
+            tensor_chunks[key_i][name] = SparseChunks(
+                n_chunks, idx_col[row:row + rows],
+                vals_col[row:row + rows], vers_col[row:row + rows])
+            row += rows
+
+    for key_i, chunks in tensor_chunks.items():
+        values[key_i] = TensorState.of(chunks, lamport=lamports[key_i])
+    return LatticeStore.of({keys[i]: v for i, v in values.items()})
+
+
+# ---------------------------------------------------------------------------
+# Generic payload bodies (what frames carry)
+# ---------------------------------------------------------------------------
+
+def encode_value(value: Any) -> bytes:
+    """Tagged payload body for any lattice value the engine ships: stores
+    and bare TensorStates take the stacked columnar path; every other
+    lattice (membership views, dot stores, counters…) rides opaque."""
+    if isinstance(value, LatticeStore):
+        return bytes([_TAG_STORE]) + encode_store(value)
+    if isinstance(value, TensorState):
+        wrapped = LatticeStore.key_delta(_SINGLE, value)
+        return bytes([_TAG_TENSORSTATE]) + encode_store(wrapped)
+    return bytes([_TAG_OPAQUE]) + pickle.dumps(value, protocol=4)
+
+
+def decode_value(buf) -> Any:
+    view = memoryview(buf)
+    tag = view[0]
+    if tag == _TAG_STORE:
+        return decode_store(view[1:])
+    if tag == _TAG_TENSORSTATE:
+        store = decode_store(view[1:])
+        return store.get(_SINGLE, TensorState)
+    if tag == _TAG_OPAQUE:
+        return pickle.loads(view[1:])
+    raise ValueError(f"unknown payload tag {tag}")
+
+
+# ---------------------------------------------------------------------------
+# Top-k sparsified updates (sync.compression payloads)
+# ---------------------------------------------------------------------------
+
+def encode_topk(sparse: Any) -> bytes:
+    """Body encoding for a ``TopKCompressor.compress`` result: per leaf,
+    raw little-endian index/value columns (the dominant bytes); the
+    pytree structure rides as a tiny pickled preamble."""
+    import jax
+
+    is_leaf = lambda t: isinstance(t, dict) and "idx" in t
+    leaves, treedef = jax.tree_util.tree_flatten(sparse, is_leaf=is_leaf)
+    tdef = pickle.dumps(treedef, protocol=4)
+    out = bytearray()
+    out += _U32.pack(len(tdef))
+    out += tdef
+    out += _U32.pack(len(leaves))
+    for leaf in leaves:
+        idx = np.ascontiguousarray(leaf["idx"], dtype=np.int32)
+        vals = np.ascontiguousarray(leaf["vals"])
+        shape = tuple(int(s) for s in leaf["shape"])
+        out += _U8.pack(len(shape))
+        for dim in shape:
+            out += _U32.pack(dim)
+        _put_str(out, np.dtype(vals.dtype).str, width=_U16)
+        out += _U32.pack(int(idx.size))
+        _pad8(out)
+        out += idx.tobytes()
+        _pad8(out)
+        out += vals.tobytes()
+        _pad8(out)
+    return bytes(out)
+
+
+def decode_topk(buf) -> Any:
+    import jax
+
+    cur = _Cursor(buf)
+    treedef = pickle.loads(cur.get_blob())
+    n_leaves = cur.unpack(_U32)
+    leaves = []
+    for _ in range(n_leaves):
+        rank = cur.unpack(_U8)
+        shape = tuple(cur.unpack(_U32) for _ in range(rank))
+        dtype = np.dtype(cur.get_str(width=_U16))
+        k = cur.unpack(_U32)
+        idx = cur.array(np.int32, k)
+        vals = cur.array(dtype, k)
+        leaves.append({"idx": idx, "vals": vals, "shape": shape})
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Digest summaries (typed envelope for version-vector-style exchanges)
+# ---------------------------------------------------------------------------
+
+def encode_digest(store: LatticeStore) -> bytes:
+    """Per-(key, tensor) chunk-version summary — the 'what do you hold'
+    half of a digest-driven anti-entropy exchange; a peer diffs it
+    against local versions to compute exactly the rows to ship."""
+    items: List[Tuple[str, str, np.ndarray]] = []
+    for key, val in store.entries:
+        if not isinstance(val, TensorState):
+            continue
+        for name, ct in val.chunks:
+            if ct.is_sparse:
+                vers = np.zeros(ct.n_chunks,
+                                dtype=np.asarray(ct.vers).dtype)
+                vers[ct.idx] = ct.vers
+            else:
+                vers = np.asarray(ct.versions)
+            items.append((key, name, vers))
+    out = bytearray()
+    out += _U32.pack(len(items))
+    for key, name, vers in items:
+        _put_str(out, key)
+        _put_str(out, name)
+        _put_str(out, np.dtype(vers.dtype).str, width=_U16)
+        out += _U32.pack(len(vers))
+        _pad8(out)
+        out += np.ascontiguousarray(vers).tobytes()
+    return bytes(out)
+
+
+def decode_digest(buf) -> Dict[Tuple[str, str], np.ndarray]:
+    cur = _Cursor(buf)
+    n = cur.unpack(_U32)
+    out: Dict[Tuple[str, str], np.ndarray] = {}
+    for _ in range(n):
+        key = cur.get_str()
+        name = cur.get_str()
+        vstr = cur.get_str(width=_U16)
+        count = cur.unpack(_U32)
+        out[(key, name)] = cur.array(np.dtype(vstr), count)
+    return out
