@@ -12,8 +12,9 @@ Prints ``name,us_per_call,derived`` CSV:
   bench_store               keyed LatticeStore: batched vs per-key join
                             throughput + sharded bytes-per-round scaling
   bench_wire                binary δ-wire codec: sparse-round frame bytes
-                            vs dense full-state encoding + rebalance
-                            handoff vs organic anti-entropy
+                            vs dense full-state encoding, rebalance
+                            handoff vs organic anti-entropy, digest-sync
+                            reconnect catch-up vs the full-state fallback
   bench_roofline            per-(arch × shape × mesh) roofline rows from
                             the dry-run artifacts (run dryrun first)
 

@@ -30,11 +30,12 @@ from .crdts import (ALL_CRDT_TYPES, AWORSet, AWORSetTombstone, DWFlag,
                     DeltaCRDT, EWFlag, GCounter, GSet, LWWRegister, LWWSet,
                     MVRegister, ORMap, PNCounter, RWORSet, TwoPSet)
 from .store import LatticeStore, digest_select_store
+from .digest import StoreDigest, digest_diff, opaque_hash, store_digest
 from .propagation import (AvoidBackPropagation, Compose, DeltaEntry,
-                          DigestBudget, POLICY_SPECS, RemoveRedundant,
-                          Replica, ShipAll, ShipStateEveryK, ShippingPolicy,
-                          StoreReplica, causal_policy_spec, make_policy,
-                          stable_seed)
+                          DigestBudget, DigestExchange, POLICY_SPECS,
+                          RemoveRedundant, Replica, ShipAll,
+                          ShipStateEveryK, ShippingPolicy, StoreReplica,
+                          causal_policy_spec, make_policy, stable_seed)
 from .antientropy import (BasicNode, CausalNode, FullStateNode, converged,
                           run_to_convergence)
 from .sim import NetConfig, NetStats, Node, Simulator, structural_size
@@ -45,9 +46,10 @@ __all__ = [
     "EWFlag", "GCounter", "GSet", "LWWRegister", "LWWSet", "MVRegister",
     "ORMap", "PNCounter", "RWORSet", "TwoPSet",
     "LatticeStore", "digest_select_store",
+    "StoreDigest", "digest_diff", "opaque_hash", "store_digest",
     "AvoidBackPropagation", "Compose", "DeltaEntry", "DigestBudget",
-    "POLICY_SPECS", "RemoveRedundant", "Replica", "ShipAll",
-    "ShipStateEveryK", "ShippingPolicy", "StoreReplica",
+    "DigestExchange", "POLICY_SPECS", "RemoveRedundant", "Replica",
+    "ShipAll", "ShipStateEveryK", "ShippingPolicy", "StoreReplica",
     "causal_policy_spec", "make_policy", "stable_seed",
     "BasicNode", "CausalNode", "FullStateNode", "converged",
     "run_to_convergence",

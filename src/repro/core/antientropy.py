@@ -64,8 +64,22 @@ class BasicNode(Replica):
         self.ship_state_every = ship_state_every
 
     # -- paper: chooseᵢ(Xᵢ, Dᵢ), kept for the paper correspondence -------------
-    def choose(self) -> Any:
-        """What the next broadcast would carry (to a generic neighbour).
+    def choose(self, dst: Optional[str] = None) -> Any:
+        """What the next broadcast would carry: to ``dst`` when given
+        (the full per-destination pipeline — watermark, ``include``
+        filter, ``finalize``), else to a *generic* neighbour (coarse
+        ``X``-or-``D`` preview, per-destination hooks skipped).
+
+        The generic case passes ``dst=None`` — a sentinel no policy hook
+        treats as a real receiver. It used to pass ``""``, which is a
+        perfectly legal replica id: ``RemoveRedundant`` would consult
+        ``known_state("")`` (any bound actually tracked for a replica
+        named ``""`` would silently filter the preview) and
+        ``AvoidBackPropagation``'s ``include`` compares it against entry
+        origins. ``None`` is unambiguous, and dst-dependent hooks must
+        treat it as "no specific receiver" (``dict.get(None)`` misses and
+        ``origin != None`` holds for every remote entry, so the built-in
+        policies do so for free).
 
         Peeks at the round counter the engine will use: ``on_periodic``
         increments ``rounds`` before shipping.
@@ -73,9 +87,21 @@ class BasicNode(Replica):
         rounds = self.rounds
         try:
             self.rounds += 1
-            if self.policy.want_full_state(self, "") or not self.entries:
-                return self.X
-            return self.D
+            if self.policy.pull_exchange and self.policy.pull_round(self,
+                                                                    dst):
+                from .digest import store_digest
+                return ("digest", store_digest(self.store))
+            if dst is None:
+                # coarse preview: per-destination hooks (watermarks,
+                # include) are skipped — BP's include would misread the
+                # sentinel as "local entries echo back to their origin"
+                if self.policy.want_full_state(self, None) \
+                        or not self.entries:
+                    return self.X
+                return self.D
+            # the real pipeline _ship_basic runs, minus the side effects
+            m, _full = self._basic_payload(dst)
+            return m if m is not None else self.bottom
         finally:
             self.rounds = rounds
 

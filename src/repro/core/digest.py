@@ -1,0 +1,170 @@
+"""Digest summaries for request/response (pull-shaped) anti-entropy.
+
+Push-shaped shipping (the :class:`~repro.core.propagation.Replica`
+delta/interval machinery) needs the *sender* to know what the receiver
+lacks; when it cannot (a reconnecting replica behind the GC horizon, a
+read-heavy replica that generates no deltas of its own), the engine falls
+back to shipping the full state. Digest-driven sync (Enes et al.,
+*Efficient Synchronization of State-based CRDTs*) closes that gap with a
+pull exchange: the replica that wants data summarizes **what it holds** in
+a compact digest, and the peer replies with exactly the join-irreducible
+pieces the digest provably lacks.
+
+The digest of a :class:`~repro.core.store.LatticeStore` has two parts:
+
+* ``tensors``  — per ``(key, tensor-name)``: the dense ``[n_chunks]``
+                 version column of the resident
+                 :class:`~repro.core.tensor_lattice.TensorState` value.
+                 Chunk versions ``(lamport, writer-rank)`` are totally
+                 ordered and unique per write, so ``peer_version >
+                 digest_version`` identifies exactly the rows the
+                 requester lacks — no content ships for the summary.
+* ``opaque``   — per key holding any non-tensor lattice (counters,
+                 OR-Sets, registers, membership views, dot stores…): a
+                 16-byte blake2b hash of the canonical pickled value.
+                 Equal hashes ⇒ equal values ⇒ nothing ships; a
+                 representation-sensitive false mismatch only costs a
+                 redundant (idempotent) re-ship, never a missed update.
+
+``digest_diff(store, digest)`` is the responder's half: the sub-delta of
+``store`` that the digest's owner lacks. Its load-bearing property (the
+reason pull-sync preserves the causal delta-merging condition) is **join
+equivalence to the full state**::
+
+    requester_X ⊔ digest_diff(responder_X, digest(requester_X))
+        == requester_X ⊔ responder_X
+
+Every row the filter removes is one the requester's version dominates
+(LWW keeps the requester's row either way), and every opaque key it
+removes is value-equal — so joining a digest response is indistinguishable
+from joining the responder's full state, which Def. 6 always permits.
+The wire layer applies the same filter directly at encode time
+(``wire.codec.encode_store(known_versions=...)``) so the response frame
+is built straight from resident state without materializing this
+intermediate; this module is the object-mode path and the oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import pickle
+from dataclasses import dataclass, field
+from typing import Any, Dict, Tuple
+
+import numpy as np
+
+from .store import LatticeStore, _tensorstate_cls
+
+
+def _canon(x: Any) -> Any:
+    """Representation-independent form of a lattice value for hashing.
+
+    Equal values must hash equal, but several datatypes store
+    ``frozenset``s (GSet, the OR-Set dot clouds, …) whose pickle bytes
+    depend on insertion order and on the per-process hash seed — two
+    converged replicas would hash-mismatch and re-ship the value every
+    pull round forever. Canonicalization sorts every set/dict by the
+    ``repr`` of its canonicalized members (``repr`` is deterministic
+    across processes; mixed element types make direct ``sorted``
+    unusable) and flattens dataclasses into (type-name, field, value)
+    tuples so nested containers are reached."""
+    if isinstance(x, (frozenset, set)):
+        return ("set\x00", tuple(sorted((_canon(v) for v in x), key=repr)))
+    if isinstance(x, dict):
+        return ("dict\x00", tuple(sorted(
+            ((_canon(k), _canon(v)) for k, v in x.items()), key=repr)))
+    if isinstance(x, tuple):
+        return tuple(_canon(v) for v in x)
+    if isinstance(x, list):
+        return ("list\x00", tuple(_canon(v) for v in x))
+    if dataclasses.is_dataclass(x) and not isinstance(x, type):
+        return (type(x).__name__, tuple(
+            (f.name, _canon(getattr(x, f.name)))
+            for f in dataclasses.fields(x)))
+    return x
+
+
+def opaque_hash(value: Any) -> bytes:
+    """16-byte content hash of a non-tensor lattice value: blake2b over
+    the pickled *canonical* form (see :func:`_canon`), so equal values
+    hash equal regardless of internal set/dict ordering or process."""
+    return hashlib.blake2b(pickle.dumps(_canon(value), protocol=4),
+                           digest_size=16).digest()
+
+
+@dataclass(eq=False)
+class StoreDigest:
+    """Compact 'what I hold' summary of a store (see module docstring)."""
+
+    tensors: Dict[Tuple[str, str], np.ndarray] = field(default_factory=dict)
+    opaque: Dict[str, bytes] = field(default_factory=dict)
+
+    def __eq__(self, other: object) -> bool:
+        if not isinstance(other, StoreDigest):
+            return NotImplemented
+        return (self.opaque == other.opaque
+                and set(self.tensors) == set(other.tensors)
+                and all(np.array_equal(v, other.tensors[k])
+                        for k, v in self.tensors.items()))
+
+    def __repr__(self) -> str:
+        return (f"StoreDigest({len(self.tensors)} tensor cols, "
+                f"{len(self.opaque)} opaque keys)")
+
+
+def store_digest(store: LatticeStore) -> StoreDigest:
+    """Summarize ``store``: dense per-chunk version columns for tensor
+    values, content hashes for everything else."""
+    ts_cls = _tensorstate_cls()
+    out = StoreDigest()
+    for key, val in store.entries:
+        if ts_cls is not None and isinstance(val, ts_cls):
+            from .tensor_lattice import dense_versions
+            for name, ct in val.chunks:
+                out.tensors[(key, name)] = dense_versions(ct)
+        else:
+            out.opaque[key] = opaque_hash(val)
+    return out
+
+
+def versions_at(known: np.ndarray, idx: np.ndarray,
+                vers_dtype) -> np.ndarray:
+    """The digest owner's version at each chunk position in ``idx`` —
+    positions beyond the digest column (the requester's tensor is
+    shorter) read as ⊥, so those rows always ship."""
+    known = np.asarray(known)
+    at = np.zeros(idx.shape, dtype=vers_dtype)
+    in_range = idx < known.size
+    at[in_range] = known[idx[in_range]].astype(vers_dtype)
+    return at
+
+
+def digest_diff(store: LatticeStore, digest: StoreDigest) -> LatticeStore:
+    """The sub-delta of ``store`` that ``digest``'s owner provably lacks:
+    per tensor, only the chunk rows whose version strictly exceeds the
+    digest's version at that position (as sparse row sets); per opaque
+    key, the whole value iff its content hash differs; keys absent from
+    the digest ship wholesale. Always ≤ ``store``, and join-equivalent to
+    it for the digest's owner (module docstring)."""
+    ts_cls = _tensorstate_cls()
+    out: Dict[str, Any] = {}
+    for key, val in store.entries:
+        if ts_cls is None or not isinstance(val, ts_cls):
+            h = digest.opaque.get(key)
+            if h is None or h != opaque_hash(val):
+                out[key] = val
+            continue
+        from .tensor_lattice import live_rows, sparse_chunks
+        chunks: Dict[str, Any] = {}
+        for name, ct in val.chunks:
+            idx, vals, vers = live_rows(ct)
+            known = digest.tensors.get((key, name))
+            if known is not None and idx.size:
+                keep = vers > versions_at(known, idx, vers.dtype)
+                idx, vals, vers = idx[keep], vals[keep], vers[keep]
+            if idx.size:
+                chunks[name] = sparse_chunks(ct.shape[0], idx, vals, vers)
+        if chunks:
+            out[key] = ts_cls.of(chunks, lamport=val.lamport)
+    return LatticeStore.of(out)

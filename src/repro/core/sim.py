@@ -44,6 +44,12 @@ def structural_size(x: Any) -> int:
         return len(x)
     if isinstance(x, (int, float, str, bool)):
         return 1
+    try:
+        import numpy as _np
+        if isinstance(x, _np.ndarray):
+            return int(x.size)    # digest version columns in object mode
+    except ImportError:  # pragma: no cover
+        pass
     if isinstance(x, (list, tuple, set, frozenset)):
         return sum(structural_size(v) for v in x)
     if isinstance(x, dict):
@@ -78,16 +84,28 @@ class NetStats:
         self.by_kind[kind] = self.by_kind.get(kind, 0) + 1
         self.bytes_by_kind[kind] = self.bytes_by_kind.get(kind, 0) + size
 
-    PAYLOAD_KINDS = ("delta", "state", "handoff", "membership")
+    PAYLOAD_KINDS = ("delta", "state", "handoff", "membership",
+                     "digest", "digest-resp")
 
     def payload_atoms(self) -> int:
-        """Size of all CRDT payload traffic (delta / state / handoff /
-        membership messages; acks and other control traffic excluded) —
-        the quantity the §9 tables and the shipping-policy benchmarks
-        compare. Structural atoms for object messages; measured frame
-        bytes when replicas ship through the wire codec."""
+        """Size of all traffic a shipping policy pays for: delta / state
+        / handoff / membership payloads plus BOTH halves of a digest
+        exchange — requests carry per-chunk version columns that scale
+        with store size, so excluding them would flatter pull policies
+        in the §9 tables and policy benchmarks. Only fixed-size control
+        traffic (acks) is excluded. Structural atoms for object
+        messages; measured frame bytes when replicas ship through the
+        wire codec."""
         return sum(v for k, v in self.bytes_by_kind.items()
                    if k in self.PAYLOAD_KINDS)
+
+    def pull_bytes(self) -> int:
+        """Total cost of digest exchanges: requests (summaries) plus
+        responses (the rows the requester lacked) — what a reconnect
+        catch-up pays under digest-sync, compared against one full-state
+        frame in ``bench_wire``."""
+        return (self.bytes_by_kind.get("digest", 0)
+                + self.bytes_by_kind.get("digest-resp", 0))
 
 
 class Node:

@@ -265,6 +265,32 @@ def _sp_live(sp: SparseChunks):
     return sp.idx[live], np.asarray(sp.vals)[live], np.asarray(sp.vers)[live]
 
 
+def live_rows(ct) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(chunk positions, values rows, versions) of a chunk tensor's live
+    chunks, sorted by position — directly from sparse row sets, by mask
+    for dense. The shared row extractor behind the wire codec and the
+    digest-diff machinery."""
+    if ct.is_sparse:
+        idx, vals, vers = _sp_live(ct)
+        return np.asarray(idx, dtype=np.int32), vals, vers
+    vers = np.asarray(ct.versions)
+    mask = vers > 0
+    idx = np.nonzero(mask)[0].astype(np.int32)
+    return idx, np.asarray(ct.values)[idx], vers[idx]
+
+
+def dense_versions(ct) -> np.ndarray:
+    """The full [n_chunks] version column of a dense or sparse chunk
+    tensor (version 0 == ⊥ at unlisted sparse positions) — what a digest
+    summary carries per (key, tensor)."""
+    if ct.is_sparse:
+        vers = np.zeros(ct.n_chunks, dtype=np.asarray(ct.vers).dtype)
+        if ct.idx.size:
+            vers[ct.idx] = ct.vers
+        return vers
+    return np.asarray(ct.versions)
+
+
 def _pair_eq(a, b) -> bool:
     """Value equality over any density mix. Relies on the ⊥ invariant
     (version 0 ⇒ zero values), which every constructor maintains."""

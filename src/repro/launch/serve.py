@@ -8,6 +8,13 @@ table as an ORMap δ-CRDT across N gateway replicas over a lossy network —
 request metadata survives gateway failover with no coordinator (the
 serving-side use of the paper).
 
+``--ship-policy`` selects what the gateway gossip ships each round —
+push policies (``bp+rr``, ``every:k``) and the pull exchange
+(``digest-sync``, or the hybrid ``bp+rr+digest-sync:8``): gateways
+periodically trade compact digest frames and receive back only the
+session rows they are missing, so a reconnecting gateway catches up
+without a full-state round.
+
 ``--sessions N`` is the scale-out version of the same story: N independent
 session objects live in a keyed ``LatticeStore`` replicated across the
 gateways, with rendezvous-hashed key ownership (``KeyOwnership`` +
@@ -52,8 +59,9 @@ def main() -> None:
     ap.add_argument("--replicate", type=int, default=0,
                     help="N gateway replicas for the δ-CRDT session table")
     ap.add_argument("--ship-policy", default="bp+rr", type=_policy_spec,
-                    help="shipping policy for --replicate gossip "
-                         f"(e.g. {', '.join(POLICY_SPECS)})")
+                    help="shipping policy for --replicate/--sessions "
+                         f"gossip (e.g. {', '.join(POLICY_SPECS)}, "
+                         "bp+rr+digest-sync:8)")
     ap.add_argument("--sessions", type=int, default=0,
                     help="N keyed session objects spread across the "
                          "gateways (LatticeStore + hash-sharded ownership; "

@@ -260,6 +260,14 @@ class ShardByKey(ShippingPolicy):
             return delta
         return delta.restrict(self._dst_keys(dst, delta))
 
+    def restrict_pull(self, replica, dst, store):
+        """Digest responses shard like every other payload: a requester
+        never receives keys it does not replicate (a pure routing
+        restriction, which is all the pull hook permits)."""
+        if not isinstance(store, LatticeStore):
+            return store
+        return store.restrict(self._dst_keys(dst, store))
+
 
 class RebalanceHandoff:
     """Rebalance-aware handoff: push moved keys instead of waiting.

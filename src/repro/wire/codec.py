@@ -33,12 +33,13 @@ from __future__ import annotations
 
 import pickle
 import struct
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
+from ..core.digest import StoreDigest, opaque_hash, versions_at
 from ..core.store import LatticeStore
-from ..core.tensor_lattice import SparseChunks, TensorState, _sp_live
+from ..core.tensor_lattice import SparseChunks, TensorState, live_rows
 
 _U8 = struct.Struct("<B")
 _U16 = struct.Struct("<H")
@@ -104,30 +105,56 @@ class _Cursor:
         return arr.reshape(shape) if shape is not None else arr
 
 
-def _live_rows(ct) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """(chunk positions, values rows, versions) of a tensor's live chunks,
-    sorted by position — directly from sparse row sets, by mask for dense."""
-    if ct.is_sparse:
-        idx, vals, vers = _sp_live(ct)
-        return np.asarray(idx, dtype=np.int32), vals, vers
-    vers = np.asarray(ct.versions)
-    mask = vers > 0
-    idx = np.nonzero(mask)[0].astype(np.int32)
-    return idx, np.asarray(ct.values)[idx], vers[idx]
+def encode_store(store: LatticeStore,
+                 known_versions: Optional[Mapping[Tuple[str, str],
+                                                  np.ndarray]] = None,
+                 known_opaque: Optional[Mapping[str, bytes]] = None
+                 ) -> bytes:
+    """Pack a whole store delta into one stacked, columnar byte payload.
 
-
-def encode_store(store: LatticeStore) -> bytes:
-    """Pack a whole store delta into one stacked, columnar byte payload."""
+    ``known_versions`` / ``known_opaque`` are the two halves of a peer's
+    :class:`~repro.core.digest.StoreDigest` and turn the encoder into the
+    responder of a digest exchange: chunk rows whose version the digest
+    already covers are dropped **while the columns are being built**
+    (no filtered intermediate store is materialized), opaque keys with a
+    matching content hash are dropped whole, and a tensor key none of
+    whose rows survive is elided from the key table entirely. With both
+    filters unset the output is byte-identical to the unfiltered format.
+    """
     out = bytearray()
-    entries = store.entries
+
+    # -- filter pass: surviving rows per tensor, surviving keys -----------------
+    entries: List[Tuple[str, int, Any]] = []    # (key, kind, value)
+    rows_of: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+    for key, val in store.entries:
+        if isinstance(val, TensorState):
+            key_rows = []
+            for name, ct in val.chunks:
+                idx, vals, vers = live_rows(ct)
+                known = (known_versions.get((key, name))
+                         if known_versions is not None else None)
+                if known is not None and idx.size:
+                    keep = vers > versions_at(known, idx, vers.dtype)
+                    idx, vals, vers = idx[keep], vals[keep], vers[keep]
+                key_rows.append((idx, vals, vers))
+            if (known_versions is not None
+                    and not any(r[0].size for r in key_rows)):
+                continue            # peer covers every row: elide the key
+            entries.append((key, _KIND_TENSOR, val))
+            rows_of.extend(key_rows)
+        else:
+            if (known_opaque is not None
+                    and known_opaque.get(key) == opaque_hash(val)):
+                continue            # peer holds this exact value
+            entries.append((key, _KIND_OPAQUE, val))
 
     # -- key table ------------------------------------------------------------
     out += _U32.pack(len(entries))
     tensor_descs: List[Tuple[int, str, Any]] = []   # (key_i, name, ct)
     opaque: List[Tuple[int, Any]] = []
-    for key_i, (key, val) in enumerate(entries):
+    for key_i, (key, kind, val) in enumerate(entries):
         _put_str(out, key)
-        if isinstance(val, TensorState):
+        if kind == _KIND_TENSOR:
             out += bytes([_KIND_TENSOR])
             out += _U64.pack(int(val.lamport))
             for name, ct in val.chunks:
@@ -155,7 +182,7 @@ def encode_store(store: LatticeStore) -> bytes:
     groups: Dict[Tuple[int, str, str], List[int]] = {}
     rows_by_desc: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
     for desc_i, (_, _, ct) in enumerate(tensor_descs):
-        idx, vals, vers = _live_rows(ct)
+        idx, vals, vers = rows_of[desc_i]
         rows_by_desc.append((idx, vals, vers))
         sig = (int(ct.shape[1]), np.dtype(vals.dtype).str,
                np.dtype(vers.dtype).str)
@@ -331,45 +358,51 @@ def decode_topk(buf) -> Any:
 
 
 # ---------------------------------------------------------------------------
-# Digest summaries (typed envelope for version-vector-style exchanges)
+# Digest summaries (the 'what do you hold' half of request/response sync)
 # ---------------------------------------------------------------------------
 
-def encode_digest(store: LatticeStore) -> bytes:
-    """Per-(key, tensor) chunk-version summary — the 'what do you hold'
-    half of a digest-driven anti-entropy exchange; a peer diffs it
-    against local versions to compute exactly the rows to ship."""
-    items: List[Tuple[str, str, np.ndarray]] = []
-    for key, val in store.entries:
-        if not isinstance(val, TensorState):
-            continue
-        for name, ct in val.chunks:
-            if ct.is_sparse:
-                vers = np.zeros(ct.n_chunks,
-                                dtype=np.asarray(ct.vers).dtype)
-                vers[ct.idx] = ct.vers
-            else:
-                vers = np.asarray(ct.versions)
-            items.append((key, name, vers))
+def encode_digest(digest) -> bytes:
+    """Binary body of a :class:`~repro.core.digest.StoreDigest`: per
+    (key, tensor) the dense chunk-version column, per opaque key the
+    16-byte content hash. A :class:`LatticeStore` is accepted as a
+    convenience and summarized first. The responder diffs the decoded
+    digest against resident state (``encode_store(known_versions=...,
+    known_opaque=...)``) to ship exactly the rows the sender lacks."""
+    if isinstance(digest, LatticeStore):
+        from ..core.digest import store_digest
+        digest = store_digest(digest)
     out = bytearray()
-    out += _U32.pack(len(items))
-    for key, name, vers in items:
+    out += _U32.pack(len(digest.tensors))
+    for (key, name), vers in digest.tensors.items():
+        vers = np.asarray(vers)
         _put_str(out, key)
         _put_str(out, name)
         _put_str(out, np.dtype(vers.dtype).str, width=_U16)
         out += _U32.pack(len(vers))
         _pad8(out)
         out += np.ascontiguousarray(vers).tobytes()
+    out += _U32.pack(len(digest.opaque))
+    for key, h in digest.opaque.items():
+        _put_str(out, key)
+        out += _U8.pack(len(h))
+        out += h
     return bytes(out)
 
 
-def decode_digest(buf) -> Dict[Tuple[str, str], np.ndarray]:
+def decode_digest(buf) -> StoreDigest:
     cur = _Cursor(buf)
-    n = cur.unpack(_U32)
-    out: Dict[Tuple[str, str], np.ndarray] = {}
-    for _ in range(n):
+    out = StoreDigest()
+    n_tensor = cur.unpack(_U32)
+    for _ in range(n_tensor):
         key = cur.get_str()
         name = cur.get_str()
         vstr = cur.get_str(width=_U16)
         count = cur.unpack(_U32)
-        out[(key, name)] = cur.array(np.dtype(vstr), count)
+        out.tensors[(key, name)] = cur.array(np.dtype(vstr), count)
+    n_opaque = cur.unpack(_U32)
+    for _ in range(n_opaque):
+        key = cur.get_str()
+        hlen = cur.unpack(_U8)
+        out.opaque[key] = bytes(cur.buf[cur.off:cur.off + hlen])
+        cur.off += hlen
     return out

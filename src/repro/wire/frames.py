@@ -49,8 +49,9 @@ FRAME_KINDS = {
     3: "ack",          # cumulative ack (control traffic)
     4: "handoff",      # rebalance handoff push (payload traffic)
     5: "membership",   # cluster-view gossip payload
-    6: "digest",       # per-chunk version/energy summary
+    6: "digest",       # anti-entropy pull request: chunk-version summary
     7: "topk",         # top-k sparsified update payload
+    8: "digest-resp",  # pull response: rows the digest's owner lacks
 }
 _KIND_BYTES = {name: byte for byte, name in FRAME_KINDS.items()}
 
@@ -135,6 +136,12 @@ _DELTA_BASIC = struct.Struct("<BI")          # mode=0, payload len
 _DELTA_CAUSAL = struct.Struct("<BQBI")       # mode=1, counter, ghost?, len
 _ACK = struct.Struct("<Q")
 
+# what encode_store yields for a store with nothing in it — the
+# all-filtered digest-response sentinel (0 keys, 0 opaque, 0 descriptors,
+# 0 signature groups)
+_EMPTY_STORE_BODY = (struct.Struct("<I").pack(0) * 3
+                     + struct.Struct("<H").pack(0))
+
 
 class WireCodec:
     """Encodes the propagation engine's messages as binary frames.
@@ -148,14 +155,31 @@ class WireCodec:
     """
 
     def encode_msg(self, msg: Tuple, *, full_state: bool = False
-                   ) -> FrameBytes:
-        from .codec import encode_value
+                   ) -> Optional[FrameBytes]:
+        from .codec import encode_digest, encode_store, encode_value
 
         mkind = msg[0]
         if mkind == "ack":
             return encode_frame("ack", _ACK.pack(int(msg[1])))
         if mkind == "handoff":
             return encode_frame("handoff", encode_value(msg[1]))
+        if mkind == "digest":
+            return encode_frame("digest", encode_digest(msg[1]))
+        if mkind == "digest-resp":
+            # (store, requester digest): the known-versions/known-opaque
+            # filter runs AT ENCODE TIME — the response frame is built
+            # straight from resident state and carries only the rows the
+            # requester's digest provably lacks. When nothing survives
+            # the filter there is no frame at all (None: the engine's
+            # _post drops it), so a convergent mesh trades only digests
+            # — and the emptiness check costs nothing beyond the one
+            # encode pass that had to happen anyway.
+            _, store, digest = msg
+            body = encode_store(store, known_versions=digest.tensors,
+                                known_opaque=digest.opaque)
+            if body == _EMPTY_STORE_BODY:
+                return None
+            return encode_frame("digest-resp", body)
         if mkind != "delta":  # pragma: no cover - engine ships no others
             raise FrameError(f"unframeable message kind {mkind!r}")
         if len(msg) == 2:                      # basic-mode delta-group
@@ -181,13 +205,17 @@ class WireCodec:
         return "state" if full_state else "delta"
 
     def decode_msg(self, frame) -> Tuple:
-        from .codec import decode_value
+        from .codec import decode_digest, decode_store, decode_value
 
         kind, payload = decode_frame(frame)
         if kind == "ack":
             return ("ack", _ACK.unpack_from(payload, 0)[0])
         if kind == "handoff":
             return ("handoff", decode_value(payload))
+        if kind == "digest":
+            return ("digest", decode_digest(payload))
+        if kind == "digest-resp":
+            return ("digest-resp", decode_store(payload))
         if kind in ("delta", "state", "membership"):
             mode = payload[0]
             if mode == 0:

@@ -1,0 +1,436 @@
+"""Digest-driven request/response anti-entropy.
+
+The load-bearing properties:
+
+* a digest response contains **only** rows the requester provably lacks
+  (version-dominated tensor rows and hash-equal opaque keys never ship),
+  and joining it is join-equivalent to joining the responder's full state
+  — the reason pull-sync preserves the causal merging condition;
+* the ``known_versions`` / ``known_opaque`` filter applied at
+  ``encode_store`` time produces exactly ``digest_diff``'s answer (the
+  object-mode oracle), eliding fully-covered keys from the frame;
+* replicas running pure pull (``digest-sync``) converge — object mode and
+  wire mode, single-object and keyed, basic and causal — and a causal
+  pure-pull replica's delta buffer stays bounded even though no acks flow;
+* a reconnecting replica catches up for strictly (and massively) fewer
+  measured bytes than the full-state fallback would ship;
+* the hybrid (``bp+rr+digest-sync:k``) still pushes delta-intervals and
+  keeps the ack/GC horizon advancing.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (Compose, DigestExchange, GCounter, GSet,
+                        LatticeStore, NetConfig, POLICY_SPECS, Replica,
+                        Simulator, StoreDigest, StoreReplica, converged,
+                        digest_diff, make_policy, opaque_hash,
+                        run_to_convergence, store_digest)
+from repro.core.tensor_lattice import TensorState, chunk_tensor
+from repro.wire import (WireCodec, decode_digest, decode_store,
+                        encode_digest, encode_store)
+
+
+def _tensor_store(n_keys=6, n_chunks=4, chunk=8, seed=0, version=1):
+    rng = np.random.default_rng(seed)
+    return LatticeStore.of({
+        f"obj{i}": TensorState.of({"w": chunk_tensor(
+            rng.normal(size=(n_chunks * chunk,)).astype(np.float32),
+            chunk, version=version)})
+        for i in range(n_keys)})
+
+
+def _advance(store: LatticeStore, keys, rank=1, seed=9):
+    """Rewrite one chunk on each of ``keys`` — the 'fresh rows' a stale
+    peer is missing."""
+    rng = np.random.default_rng(seed)
+    out = store
+    for k, key in enumerate(keys):
+        cur = out.get(key, TensorState).as_dict()["w"]
+        n_chunks, csz = cur.shape
+        d = out.get(key, TensorState).write_delta(
+            rank, "w", rng.normal(size=(1, csz)).astype(np.float32),
+            chunk_idx=np.array([k % n_chunks]))
+        out = out.join(LatticeStore.key_delta(key, d))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Digest summaries and the diff
+# ---------------------------------------------------------------------------
+
+def test_store_digest_covers_tensor_and_opaque_keys():
+    store = _tensor_store(2).join(LatticeStore.of(
+        {"cnt": GCounter.bottom().inc_delta("r0")}))
+    dig = store_digest(store)
+    assert set(dig.tensors) == {("obj0", "w"), ("obj1", "w")}
+    assert set(dig.opaque) == {"cnt"}
+    for vers in dig.tensors.values():
+        assert vers.shape == (4,) and np.all(vers == 1)
+
+
+def test_digest_diff_ships_only_dominating_rows():
+    stale = _tensor_store()
+    fresh = _advance(stale, ["obj1", "obj4"])
+    d = digest_diff(fresh, store_digest(stale))
+    assert d.keys() == {"obj1", "obj4"}       # untouched keys elided whole
+    stale_dig = store_digest(stale)
+    for key in d.keys():
+        ct = d.get(key).as_dict()["w"]
+        assert ct.is_sparse and ct.idx.size == 1   # exactly the fresh row
+        assert np.all(np.asarray(ct.vers)
+                      > stale_dig.tensors[(key, "w")][ct.idx])
+    # join equivalence to the full state — the merging-condition argument
+    assert stale.join(d) == stale.join(fresh)
+
+
+def test_digest_diff_is_symmetric_on_divergent_stores():
+    base = _tensor_store()
+    a = _advance(base, ["obj0"], rank=1, seed=1)
+    b = _advance(base, ["obj5"], rank=2, seed=2)
+    dab = digest_diff(a, store_digest(b))      # what b lacks, from a
+    dba = digest_diff(b, store_digest(a))
+    assert b.join(dab) == a.join(dba) == a.join(b)
+
+
+def test_digest_diff_opaque_by_content_hash():
+    a = LatticeStore.of({"cnt": GCounter.bottom().inc_delta("r0"),
+                         "set": GSet.bottom().add_delta("x")})
+    b = LatticeStore.of({"cnt": GCounter.bottom().inc_delta("r0")})
+    d = digest_diff(a, store_digest(b))
+    assert d.keys() == {"set"}                # hash-equal key never ships
+    assert b.join(d) == b.join(a)
+    # unknown key ships wholesale
+    assert digest_diff(a, StoreDigest()).keys() == {"cnt", "set"}
+    assert opaque_hash(a.get("cnt")) == opaque_hash(b.get("cnt"))
+
+
+def test_digest_diff_requester_ahead_ships_nothing():
+    stale = _tensor_store()
+    fresh = _advance(stale, ["obj2"])
+    assert digest_diff(stale, store_digest(fresh)) == LatticeStore.bottom()
+
+
+# ---------------------------------------------------------------------------
+# Encode-time known_versions / known_opaque filtering
+# ---------------------------------------------------------------------------
+
+def test_encode_store_known_versions_matches_digest_diff_oracle():
+    stale = _tensor_store().join(LatticeStore.of(
+        {"cnt": GCounter.bottom().inc_delta("r0")}))
+    fresh = _advance(stale, ["obj0", "obj3"]).join(LatticeStore.of(
+        {"cnt": GCounter.bottom().inc_delta("r1")}))
+    dig = store_digest(stale)
+    wire_delta = decode_store(encode_store(
+        fresh, known_versions=dig.tensors, known_opaque=dig.opaque))
+    assert wire_delta == digest_diff(fresh, dig)
+    assert stale.join(wire_delta) == stale.join(fresh)
+    # covered tensor keys are elided from the frame entirely
+    assert "obj1" not in wire_delta.keys()
+
+
+def test_encode_store_known_filter_is_off_by_default():
+    store = _tensor_store(3)
+    assert encode_store(store) == encode_store(store, known_versions=None)
+    assert decode_store(encode_store(store)) == store
+
+
+def test_encode_store_known_filter_handles_shorter_digest_column():
+    """Rows beyond the digest's column length read as ⊥ and always ship
+    (the requester's tensor is shorter than the responder's)."""
+    store = _tensor_store(1, n_chunks=6)
+    dig = store_digest(_tensor_store(1, n_chunks=4, version=2))
+    dec = decode_store(encode_store(store, known_versions=dig.tensors,
+                                    known_opaque=dig.opaque))
+    ct = dec.get("obj0").as_dict()["w"]
+    assert sorted(np.asarray(ct.idx).tolist()) == [4, 5]
+
+
+def test_digest_frame_roundtrip_includes_opaque_hashes():
+    store = _tensor_store(2).join(LatticeStore.of(
+        {"cnt": GCounter.bottom().inc_delta("r0")}))
+    dig = store_digest(store)
+    assert decode_digest(encode_digest(dig)) == dig
+    assert decode_digest(encode_digest(store)) == dig   # store convenience
+    assert decode_digest(encode_digest(StoreDigest())) == StoreDigest()
+
+
+def test_wirecodec_routes_digest_request_and_response():
+    wc = WireCodec()
+    stale = _tensor_store()
+    fresh = _advance(stale, ["obj2"])
+    dig = store_digest(stale)
+    req = wc.encode_msg(("digest", dig))
+    assert req.kind == "digest"
+    kind, got = wc.decode_msg(req)
+    assert kind == "digest" and got == dig
+    resp = wc.encode_msg(("digest-resp", fresh, dig))
+    assert resp.kind == "digest-resp"
+    kind, delta = wc.decode_msg(resp)
+    assert kind == "digest-resp"
+    assert delta == digest_diff(fresh, dig)
+    assert stale.join(delta) == stale.join(fresh)
+
+
+# ---------------------------------------------------------------------------
+# Engine: pure pull and hybrid exchanges
+# ---------------------------------------------------------------------------
+
+def _mesh(policy_spec, *, wire=None, causal=True, bottom=None, seed=3,
+          loss=0.2, dup=0.1, keyed=False):
+    sim = Simulator(NetConfig(loss=loss, dup=dup, seed=seed))
+    ids = ["a", "b", "c"]
+    if keyed:
+        nodes = [sim.add_node(StoreReplica(
+            i, [j for j in ids if j != i], causal=causal,
+            policy=make_policy(policy_spec), rng=random.Random(seed + 1),
+            wire=wire)) for i in ids]
+    else:
+        nodes = [sim.add_node(Replica(
+            i, bottom, [j for j in ids if j != i], causal=causal,
+            policy=make_policy(policy_spec), rng=random.Random(seed + 1),
+            wire=wire)) for i in ids]
+    return sim, nodes
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("wire", [None, WireCodec()])
+def test_pure_pull_converges_single_object(causal, wire):
+    sim, nodes = _mesh("digest-sync", wire=wire, causal=causal,
+                       bottom=GSet.bottom())
+    for k in range(12):
+        nodes[k % 3].operation(lambda X, k=k: X.add_delta(f"e{k}"))
+        sim.run_for(0.5)
+    run_to_convergence(sim, nodes, interval=1.0, max_time=60_000)
+    assert converged(nodes)
+    assert nodes[0].X.elements() == {f"e{k}" for k in range(12)}
+    # the exchange really is pull-shaped: zero push payloads on the wire
+    for kind in ("delta", "state"):
+        assert sim.stats.bytes_by_kind.get(kind, 0) == 0
+    assert sim.stats.bytes_by_kind.get("digest", 0) > 0
+    assert sim.stats.bytes_by_kind.get("digest-resp", 0) > 0
+
+
+def test_pure_pull_converges_keyed_tensor_store_over_wire():
+    sim, nodes = _mesh("digest-sync", wire=WireCodec(), keyed=True,
+                       loss=0.15, dup=0.0)
+    rng = np.random.default_rng(0)
+    for s in range(9):
+        nodes[s % 3].update(f"obj{s}", TensorState, "write_delta", s % 3,
+                            "w", rng.normal(size=(24,)).astype(np.float32),
+                            None, 8)
+        sim.run_for(0.5)
+    run_to_convergence(sim, nodes, interval=1.0, max_time=60_000)
+    assert converged(nodes)
+
+
+def test_causal_pure_pull_buffer_stays_bounded_without_acks():
+    """No pushes ⇒ no acks ⇒ the ack-driven GC horizon never moves; the
+    engine clears the (unused) buffer each pull round instead."""
+    sim, nodes = _mesh("digest-sync", causal=True, bottom=GCounter.bottom(),
+                       loss=0.0, dup=0.0)
+    for k in range(40):
+        nodes[0].operation(lambda X: X.inc_delta("a"))
+        for n in nodes:
+            n.on_periodic()
+        sim.run_for(2.0)
+        assert all(len(n.entries) <= 1 for n in nodes)
+    assert converged(nodes)
+    assert nodes[0].X.value() == 40
+
+
+def test_hybrid_pushes_and_gc_horizon_advances():
+    """digest-sync:k composed with push policies: push rounds ship
+    intervals and acks flow, so buffered entries still get GC'd."""
+    sim, nodes = _mesh("bp+rr+digest-sync:5", causal=True,
+                       bottom=GSet.bottom(), loss=0.1, dup=0.0)
+    for k in range(15):
+        nodes[k % 3].operation(lambda X, k=k: X.add_delta(f"e{k}"))
+        sim.run_for(0.6)
+    run_to_convergence(sim, nodes, interval=1.0, max_time=60_000)
+    assert converged(nodes)
+    assert sim.stats.bytes_by_kind.get("ack", 0) > 0     # pushes acked
+    for n in nodes:
+        n.gc_deltas()
+    assert all(len(n.entries) < 15 for n in nodes)       # horizon moved
+
+
+def test_read_only_replica_catches_up_via_pull():
+    """The read-heavy replica story: a node that never writes (and is
+    never pushed to) still converges by pulling."""
+    sim = Simulator(NetConfig(loss=0.0, seed=4))
+    writer = sim.add_node(Replica("w", GSet.bottom(), [], causal=True))
+    reader = sim.add_node(Replica("r", GSet.bottom(), ["w"], causal=True,
+                                  policy=make_policy("digest-sync"),
+                                  rng=random.Random(1)))
+    for k in range(5):
+        writer.operation(lambda X, k=k: X.add_delta(f"e{k}"))
+    reader.on_periodic()        # digest → w, response → r
+    sim.run_for(5.0)
+    assert reader.X == writer.X
+
+
+def test_reconnect_catchup_bytes_beat_full_state():
+    """A stale replica pulls its missing rows for far fewer measured
+    bytes than one full-state frame (the push fallback it replaces)."""
+    from repro.wire import encode_frame, encode_value
+
+    wire = WireCodec()
+    stale_store = _tensor_store(n_keys=16, n_chunks=8, chunk=64)
+    fresh_store = _advance(stale_store, ["obj3", "obj11"])
+    sim = Simulator(NetConfig(loss=0.0, seed=8))
+    stale = sim.add_node(StoreReplica(
+        "stale", ["peer"], causal=True, wire=wire,
+        policy=make_policy("digest-sync"), rng=random.Random(2)))
+    peer = sim.add_node(StoreReplica(
+        "peer", ["stale"], causal=True, wire=wire,
+        policy=make_policy("digest-sync"), rng=random.Random(2)))
+    stale.X = stale_store
+    peer.X = fresh_store
+    stale.on_periodic()
+    sim.run_for(5.0)
+    assert stale.X == peer.X
+    catchup = sim.stats.pull_bytes()
+    full = len(encode_frame("state", encode_value(fresh_store)))
+    assert 0 < catchup < 0.25 * full
+
+
+def test_sharded_pull_responses_respect_destination_shard():
+    """Composed with ShardByKey, a digest response carries only keys the
+    requester replicates — pull traffic shards like push traffic."""
+    from repro.sync import KeyOwnership, ShardByKey
+
+    ids = ["w0", "w1", "w2"]
+    ownership = KeyOwnership(ids, replication=1)
+    sim = Simulator(NetConfig(loss=0.0, seed=6))
+    nodes = {i: sim.add_node(StoreReplica(
+        i, [j for j in ids if j != i], causal=True,
+        policy=Compose(make_policy("digest-sync"), ShardByKey(ownership)),
+        rng=random.Random(5), ownership=ownership, wire=WireCodec()))
+        for i in ids}
+    keys = [f"k{s:02d}" for s in range(12)]
+    for key in keys:
+        owner = ownership.owner(key)
+        nodes[owner].update(key, GCounter, "inc_delta", owner)
+    for _ in range(8):
+        for n in nodes.values():
+            n.on_periodic()
+        sim.run_for(3.0)
+    for i in ids:
+        held = nodes[i].keys()
+        owned = {k for k in keys if ownership.replicates(i, k)}
+        assert owned <= held
+        assert all(k in owned for k in held if k in keys), (
+            f"{i} pulled keys outside its shard: {held - owned}")
+
+
+def test_pull_round_cadence_and_policy_parsing():
+    p = make_policy("digest-sync")
+    assert isinstance(p, DigestExchange) and p.every == 1 and p.pure_pull
+    h = make_policy("digest-sync:4")
+    assert h.every == 4 and not h.pure_pull
+    combo = make_policy("bp+rr+digest-sync:4")
+    assert combo.pull_exchange and not combo.pure_pull
+    assert "digest-sync" in POLICY_SPECS
+    with pytest.raises(ValueError):
+        DigestExchange(0)
+
+    class _R:
+        rounds = 0
+    r = _R()
+    hits = [k for k in range(1, 9) if (setattr(r, "rounds", k)
+                                       or h.pull_round(r))]
+    assert hits == [4, 8]
+
+
+def test_basic_sent_watermarks_reset_on_crash():
+    """Volatile per-destination broadcast watermarks do not survive a
+    crash (the buffer is gone too — nothing left to mark shipped)."""
+    sim = Simulator(NetConfig(seed=0))
+    r = sim.add_node(Replica("a", GSet.bottom(), ["b", "c"], causal=False,
+                             fanout=1, rng=random.Random(1)))
+    r.operation(lambda X: X.add_delta("e0"))
+    r.on_periodic()
+    assert r._basic_sent
+    r.crash_and_recover()
+    assert r._basic_sent == {} and r.entries == {}
+
+
+def test_converged_mesh_trades_only_digest_frames():
+    """Once converged, pull rounds cost digest requests only: a peer
+    whose digest covers the responder gets no (empty) response frame,
+    in both wire and object modes."""
+    for wire in (WireCodec(), None):
+        sim, nodes = _mesh("digest-sync", wire=wire, causal=True,
+                           bottom=GSet.bottom(), loss=0.0, dup=0.0)
+        nodes[0].operation(lambda X: X.add_delta("e0"))
+        run_to_convergence(sim, nodes, interval=1.0)
+        assert converged(nodes)
+        sim.run_for(10.0)    # drain straggler pre-convergence requests
+        sim.stats.bytes_by_kind.clear()
+        for n in nodes:
+            n.on_periodic()
+        sim.run_for(5.0)
+        assert sim.stats.bytes_by_kind.get("digest", 0) > 0
+        assert sim.stats.bytes_by_kind.get("digest-resp", 0) == 0, wire
+
+
+def test_opaque_hash_is_representation_independent():
+    """Equal frozenset-backed values built in different orders must hash
+    equal, or converged replicas re-ship the value every pull round."""
+    a = GSet.bottom()
+    for e in [f"e{k}" for k in range(12)]:
+        a = a.join(GSet.bottom().add_delta(e))
+    b = GSet.bottom()
+    for e in [f"e{k}" for k in reversed(range(12))]:
+        b = b.join(GSet.bottom().add_delta(e))
+    assert a == b and opaque_hash(a) == opaque_hash(b)
+    from repro.core import AWORSet
+    s1 = AWORSet.bottom().add_delta("r0", "x").join(
+        AWORSet.bottom().add_delta("r1", "y"))
+    s2 = AWORSet.bottom().add_delta("r1", "y").join(
+        AWORSet.bottom().add_delta("r0", "x"))
+    assert s1 == s2 and opaque_hash(s1) == opaque_hash(s2)
+    assert opaque_hash(a) != opaque_hash(a.join(GSet.bottom()
+                                                .add_delta("extra")))
+
+
+def test_converged_multielement_mesh_sends_no_responses():
+    """The e2e version: replicas converge on a 12-element set assembled
+    in different orders on each node; post-convergence pull rounds must
+    ship digests only (hash-equal opaque values never re-ship)."""
+    sim, nodes = _mesh("digest-sync", wire=WireCodec(), causal=True,
+                       bottom=GSet.bottom(), loss=0.0, dup=0.0)
+    for k in range(12):
+        nodes[k % 3].operation(lambda X, k=k: X.add_delta(f"e{k}"))
+        sim.run_for(1.0)
+    run_to_convergence(sim, nodes, interval=1.0)
+    assert converged(nodes)
+    sim.run_for(10.0)        # drain straggler pre-convergence requests
+    sim.stats.bytes_by_kind.clear()
+    for n in nodes:
+        n.on_periodic()
+    sim.run_for(5.0)
+    assert sim.stats.bytes_by_kind.get("digest", 0) > 0
+    assert sim.stats.bytes_by_kind.get("digest-resp", 0) == 0
+
+
+def test_digest_budget_compose_does_not_trim_pull_responses():
+    """Regression: responses used to pass through policy.finalize, so a
+    composed DigestBudget re-trimmed every response to the same
+    top-energy chunks and pure pull never converged (no full-state
+    rounds to rescue the tail). restrict_pull exempts responses."""
+    sim = Simulator(NetConfig(loss=0.0, seed=12))
+    nodes = [sim.add_node(StoreReplica(
+        i, [j for j in ("a", "b") if j != i], causal=False,
+        policy=make_policy("digest:64+digest-sync"),
+        rng=random.Random(4))) for i in ("a", "b")]
+    nodes[0].X = _tensor_store(n_keys=4)     # ~4 keys × 4 chunks × 32B
+    for _ in range(6):
+        for n in nodes:
+            n.on_periodic()
+        sim.run_for(3.0)
+    assert converged(nodes)
+    assert nodes[1].keys() == {f"obj{i}" for i in range(4)}

@@ -262,3 +262,133 @@ def test_ship_state_every_k_in_causal_mode_forces_full_state():
     r._ship_to("b")
     (msg,) = _deltas_to(cap, "b")
     assert msg[1] == r.X                      # full X, not the interval
+
+
+# ---------------------------------------------------------------------------
+# Basic-mode fanout: deltas must survive until EVERY neighbor got them
+# ---------------------------------------------------------------------------
+
+def test_basic_fanout_retains_unshipped_deltas():
+    """Regression: on_periodic used to clear the whole delta-group after
+    broadcasting to only the fanout-sampled targets, permanently dropping
+    the deltas for every unsampled neighbor."""
+    from repro.core import GSet
+
+    cap = _CaptureSim()
+    r = Replica("a", GSet.bottom(), ["b", "c"], causal=False, fanout=1,
+                transitive=False, rng=random.Random(0))
+    r.attach(cap)
+    r.operation(lambda X: X.add_delta("e0"))
+    r.on_periodic()
+    (first_dst,) = {d for _, d, _ in cap.sent}
+    # the entry survives for the neighbor that was NOT sampled
+    assert len(r.entries) == 1
+    other = ({"b", "c"} - {first_dst}).pop()
+    for _ in range(20):
+        r.on_periodic()
+        if not r.entries:
+            break
+    assert not r.entries                     # dropped only once both got it
+    delta_payloads = [(d, m[1]) for _, d, m in cap.sent
+                      if m[0] == "delta" and m[1].elements()]
+    assert {d for d, _ in delta_payloads} == {"b", "c"}
+    assert all(p.elements() == {"e0"} for _, p in delta_payloads
+               if p.elements())
+    assert other in {d for d, _ in delta_payloads}
+
+
+def test_basic_fanout_no_delta_loss_end_to_end():
+    """A continuously-writing basic replica with fanout sampling: every
+    element reaches BOTH silent neighbors as deltas (no reliance on the
+    empty-buffer full-state round to paper over the loss). Fails on the
+    clear-after-broadcast behavior, where each element only ever reached
+    the one sampled neighbor (~half the set each)."""
+    from repro.core import GSet
+
+    sim = Simulator(NetConfig(loss=0.0, seed=3))
+    a = sim.add_node(Replica("a", GSet.bottom(), ["b", "c"], causal=False,
+                             fanout=1, transitive=False,
+                             rng=random.Random(5)))
+    b = sim.add_node(Replica("b", GSet.bottom(), [], causal=False))
+    c = sim.add_node(Replica("c", GSet.bottom(), [], causal=False))
+    R = 40
+    for r in range(R):
+        a.operation(lambda X, r=r: X.add_delta(f"e{r}"))
+        a.on_periodic()
+        sim.run_for(2.0)
+    for n in (b, c):
+        missing = {f"e{r}" for r in range(R - 12)} - n.X.elements()
+        assert not missing, f"{n.id} permanently missed deltas: {missing}"
+
+
+def test_basic_full_broadcast_still_clears_buffer_each_round():
+    """fanout=None (broadcast to all): the per-destination watermarks
+    reduce exactly to Algorithm 1's clear-after-broadcast."""
+    from repro.core import GSet
+
+    cap = _CaptureSim()
+    r = Replica("a", GSet.bottom(), ["b", "c"], causal=False,
+                transitive=False, rng=random.Random(0))
+    r.attach(cap)
+    r.operation(lambda X: X.add_delta("e0"))
+    r.on_periodic()
+    assert not r.entries
+    assert {d for _, d, _ in cap.sent} == {"b", "c"}
+
+
+# ---------------------------------------------------------------------------
+# choose(): the paper-facing preview, across the whole policy matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", list(POLICY_SPECS)
+                         + ["digest:4096", "every:3+bp", "digest-sync:4",
+                            "bp+rr+digest-sync:4"])
+def test_choose_matches_shipment_across_policy_matrix(spec):
+    """For every policy: choose(dst) equals what on_periodic actually
+    posts to dst, and the generic choose() (dst=None — never the
+    empty-string pseudo-id, which is a legal replica name) returns the
+    X-or-D preview without consulting per-destination state."""
+    from repro.core import GSet
+
+    cap = _CaptureSim()
+    r = BasicNode("a", GSet.bottom(), ["b", "c"], policy=make_policy(spec))
+    r.attach(cap)
+    # remote-origin entry (exercises BP), then a local one
+    r.on_receive("b", ("delta", GSet(frozenset({"remote"}))))
+    r.operation(lambda X: X.add_delta("local"))
+    generic = r.choose()
+    per_dst = {dst: r.choose(dst) for dst in ("b", "c")}
+    cap.sent.clear()
+    r.on_periodic()
+    posted = {d: m for _, d, m in cap.sent}
+    for dst in ("b", "c"):
+        want = per_dst[dst]
+        if isinstance(want, tuple):          # pull round: digest request
+            assert posted[dst][0] == "digest"
+            assert posted[dst][1] == want[1]
+        elif want == GSet.bottom():          # all filtered ⇒ nothing sent
+            assert dst not in posted
+        else:
+            assert posted[dst][1] == want
+    # generic preview is X or D (or the digest request on pull rounds)
+    if isinstance(generic, tuple):
+        assert generic[0] == "digest"
+    else:
+        assert generic in (r.X, r.D)
+
+
+def test_choose_generic_is_safe_for_empty_string_replica_id():
+    """A neighbor literally named "" must not leak its per-destination
+    state into the generic preview (the old dst="" sentinel did)."""
+    from repro.core import GSet
+
+    cap = _CaptureSim()
+    r = BasicNode("a", GSet.bottom(), ["", "c"],
+                  policy=make_policy("bp+rr"))
+    r.attach(cap)
+    r.operation(lambda X: X.add_delta("x"))
+    r._known[""] = r.X                       # "" provably holds everything
+    assert r.choose() == r.D                 # generic preview unaffected
+    assert r.choose("") == GSet.bottom()     # per-dst preview IS affected
+    r._basic_sent[""] = r.c                  # already broadcast to ""
+    assert r.choose("") == r.X               # ⇒ the full-state fallback

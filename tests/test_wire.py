@@ -144,13 +144,19 @@ def test_value_codec_bare_tensorstate_and_opaque():
 
 
 def test_digest_roundtrip():
+    from repro.core import opaque_hash, store_digest
+
     store = _mixed_store()
     dig = decode_digest(encode_digest(store))
+    assert dig == store_digest(store)
     ts = store.get("tensors")
-    assert set(dig) == {("tensors", "w"), ("tensors", "b")}
-    for (key, name), vers in dig.items():
+    assert set(dig.tensors) == {("tensors", "w"), ("tensors", "b")}
+    for (key, name), vers in dig.tensors.items():
         assert np.array_equal(
             vers, np.asarray(ts.as_dict()[name].versions))
+    # every non-tensor key is summarized by its content hash
+    assert set(dig.opaque) == {"counter", "set", "reg"}
+    assert dig.opaque["counter"] == opaque_hash(store.get("counter"))
 
 
 # ---------------------------------------------------------------------------
