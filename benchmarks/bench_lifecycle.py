@@ -1,0 +1,200 @@
+"""Key-lifecycle benchmarks: the store *shrinks* again.
+
+Claims measured and asserted (regressions fail the suite):
+
+1. **Resident bytes return to ~baseline after sessions expire.** A fleet
+   of gateways serves N tensor-valued session keys under a TTL; once the
+   sessions see their last write and the acked reaper runs, the resident
+   store bytes across the whole fleet must be ≤ 15% of the peak — what
+   tombstone GC is *for*. Asserted in object mode and wire (binary
+   frame) mode.
+
+2. **A partitioned straggler rejoining with pre-reap deltas converges to
+   the reaped state.** The straggler holds (and replays) deltas written
+   before the reap; after the partition heals, every write-set member
+   still shows the tombstone, the replayed delta is ⊥-absorbed, and the
+   straggler's own copy drains. No resurrection, in both modes.
+
+3. **Read-replica hot-key reads converge without joining the write
+   set.** A subscriber outside a hot key's write replica set serves the
+   key's latest value pulled via digest-sync, never buffers/forwards
+   the key, and never appears in its reap quorum.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import List, Tuple
+
+import numpy as np
+
+
+def _nbytes(store) -> int:
+    """Resident bytes of a store: tensor payload bytes (dense or sparse)
+    plus a nominal 24B per lifecycle entry (key + epoch + expiry)."""
+    total = 0
+    for _, val in store.entries:
+        chunks = getattr(val, "chunks", None)
+        if chunks is None:
+            total += 64                      # nominal opaque value
+            continue
+        for _, ct in chunks:
+            if getattr(ct, "is_sparse", False):
+                total += (ct.idx.nbytes + np.asarray(ct.vals).nbytes
+                          + np.asarray(ct.vers).nbytes)
+            else:
+                total += (np.asarray(ct.values).nbytes
+                          + np.asarray(ct.versions).nbytes)
+    total += 24 * len(store.life)
+    return total
+
+
+def _fleet(wire, seed=0, ttl=6.0, n_gw=3, loss=0.1):
+    from repro.core import (Compose, NetConfig, Simulator, StoreReplica,
+                            make_policy)
+    from repro.lifecycle import ReaperProtocol
+    from repro.sync import KeyOwnership, ShardByKey
+
+    ids = [f"gw{k}" for k in range(n_gw)]
+    ownership = KeyOwnership(ids, replication=2)
+    sim = Simulator(NetConfig(loss=loss, seed=seed))
+    nodes = [sim.add_node(StoreReplica(
+        i, [j for j in ids if j != i], causal=True,
+        policy=Compose(make_policy("bp+rr+digest-sync:4"),
+                       ShardByKey(ownership)),
+        rng=random.Random(seed + k), ownership=ownership, wire=wire,
+        ttl=ttl)) for k, i in enumerate(ids)]
+    for node in nodes:
+        ReaperProtocol(node, ownership, grace=1.0, retry=2.0)
+        sim.every(1.0, node.on_periodic)
+        sim.every(6.0, node.gc_deltas)
+    return sim, nodes, ownership
+
+
+def expiry_rows(wire=None, tag="object") -> List[Tuple[str, float, str]]:
+    from repro.core.tensor_lattice import TensorState
+
+    sim, nodes, ownership = _fleet(wire, seed=3)
+    by_id = {n.id: n for n in nodes}
+    rng = np.random.default_rng(0)
+    n_sessions, n_chunks, chunk = 24, 4, 64
+    keys = [f"sess{i:03d}" for i in range(n_sessions)]
+    for i, key in enumerate(keys):
+        node = nodes[i % len(nodes)]
+        node.update(key, TensorState, "write_delta", i % 3, "kv",
+                    rng.normal(size=(n_chunks * chunk,)).astype(np.float32),
+                    None, chunk)
+        sim.run_for(0.5)
+    sim.run_for(6.0)                 # replicate out; sessions now idle
+    peak = sum(_nbytes(n.X) for n in nodes)
+
+    def all_reaped() -> bool:
+        tombs = {i: by_id[i].X.tombstoned_keys() for i in by_id}
+        return all(key in tombs[w]
+                   for key in keys for w in ownership.owners(key))
+
+    t0 = sim.time
+    while sim.time - t0 < 600.0:     # expiry passes; reaper drains
+        sim.run_for(5.0)
+        if all_reaped():
+            break
+    sim.run_for(10.0)                # let foreign eviction finish
+    resident = sum(_nbytes(n.X) for n in nodes)
+    ratio = resident / max(peak, 1)
+    assert all_reaped(), f"[{tag}] sessions past their TTL were not reaped"
+    assert ratio <= 0.15, (
+        f"[{tag}] resident bytes after reap are {resident}B = "
+        f"{ratio:.1%} of the {peak}B peak (claim: ≤15%)")
+    return [
+        (f"lifecycle_{tag}_peak_bytes", peak,
+         f"{n_sessions} tensor sessions over {len(nodes)} gateways"),
+        (f"lifecycle_{tag}_post_reap_bytes", resident,
+         f"{ratio:.1%} of peak after TTL + acked reap (claim ≤15%)"),
+    ]
+
+
+def straggler_rows(wire=None, tag="object") -> List[Tuple[str, float, str]]:
+    from repro.core import MVRegister
+
+    sim, nodes, ownership = _fleet(wire, seed=11, loss=0.0)
+    by_id = {n.id: n for n in nodes}
+    owners = ownership.owners("ghost")
+    straggler_id = [i for i in by_id if i not in owners][0]
+    straggler = by_id[straggler_id]
+    straggler.update("ghost", MVRegister, "write_delta", straggler_id, "v")
+    sim.run_for(3.0)                 # the write reaches the owners
+    pre_reap = straggler.X.restrict(["ghost"])
+    assert pre_reap.keys() == {"ghost"}
+    sim.add_partition(sim.time, sim.time + 40.0, [straggler_id],
+                      [i for i in by_id if i != straggler_id])
+    sim.run_for(45.0)                # owners reap behind the partition
+    assert all(by_id[w].X.tombstoned("ghost") for w in owners)
+    # heal: the straggler rejoins and replays its pre-reap delta straight
+    # at every owner (the arbitrarily-late retransmission the network
+    # model allows)
+    rounds = 0
+    for w in owners:
+        msg = ("handoff", pre_reap)
+        by_id[w].on_receive(straggler_id,
+                            wire.encode_msg(msg) if wire else msg)
+    while rounds < 60:
+        sim.run_for(1.0)
+        rounds += 1
+        if ("ghost" not in straggler.X.all_keys()
+                or straggler.X.tombstoned("ghost")):
+            break
+    assert all(by_id[w].X.tombstoned("ghost") for w in owners), \
+        f"[{tag}] straggler replay resurrected a reaped key"
+    assert ("ghost" not in straggler.X.all_keys()
+            or straggler.X.tombstoned("ghost")), \
+        f"[{tag}] straggler did not converge to the reaped state"
+    return [(f"lifecycle_{tag}_straggler_rounds", rounds,
+             "rounds after heal until the straggler reached the reaped "
+             "state (replays absorbed)")]
+
+
+def read_replica_rows() -> List[Tuple[str, float, str]]:
+    from repro.core import LatticeStore, MVRegister
+    from repro.wire import WireCodec
+
+    sim, nodes, ownership = _fleet(WireCodec(), seed=41, n_gw=4, loss=0.0)
+    by_id = {n.id: n for n in nodes}
+    owners = ownership.owners("hot")
+    reader_id = [i for i in by_id if i not in owners][0]
+    reader = by_id[reader_id]
+    ownership.subscribe(reader_id, "hot")
+    writer = by_id[owners[0]]
+    rounds = 0
+    for t in range(10):
+        writer.update("hot", MVRegister, "write_delta", writer.id, f"v{t}")
+        sim.run_for(1.0)
+        rounds += 1
+    while reader.X.get("hot", MVRegister).read() != frozenset({"v9"}):
+        sim.run_for(1.0)
+        rounds += 1
+        assert rounds < 60, "read replica never converged on the hot key"
+    assert reader_id not in ownership.owners("hot")
+    assert all("hot" not in e.delta.all_keys()
+               for e in reader.entries.values()
+               if isinstance(e.delta, LatticeStore)), \
+        "read replica buffered the hot key (joined the write gossip)"
+    return [("lifecycle_read_replica_rounds", rounds,
+             "writes+rounds until a digest-sync subscriber outside the "
+             "write set served the latest hot-key value")]
+
+
+def run() -> List[Tuple[str, float, str]]:
+    from repro.wire import WireCodec
+
+    rows = []
+    rows += expiry_rows(None, "object")
+    rows += expiry_rows(WireCodec(), "wire")
+    rows += straggler_rows(None, "object")
+    rows += straggler_rows(WireCodec(), "wire")
+    rows += read_replica_rows()
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, derived in run():
+        print(f"{name},{val},{derived}")

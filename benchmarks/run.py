@@ -14,7 +14,12 @@ Prints ``name,us_per_call,derived`` CSV:
   bench_wire                binary δ-wire codec: sparse-round frame bytes
                             vs dense full-state encoding, rebalance
                             handoff vs organic anti-entropy, digest-sync
-                            reconnect catch-up vs the full-state fallback
+                            reconnect catch-up vs the full-state fallback,
+                            per-group zlib column compression
+  bench_lifecycle           key lifecycle: resident bytes return to
+                            ~baseline after TTL + acked reap, straggler
+                            replays never resurrect, read-replica
+                            hot-key convergence outside the write set
   bench_roofline            per-(arch × shape × mesh) roofline rows from
                             the dry-run artifacts (run dryrun first)
 
@@ -63,7 +68,7 @@ def main(argv=None) -> None:
         if not os.path.isdir(out_dir):
             ap.error(f"--json: directory {out_dir} does not exist")
 
-    from . import (bench_antientropy, bench_kernels,
+    from . import (bench_antientropy, bench_kernels, bench_lifecycle,
                    bench_message_complexity, bench_roofline, bench_store,
                    bench_tensor_sync, bench_wire)
 
@@ -74,6 +79,7 @@ def main(argv=None) -> None:
         ("kernels", bench_kernels),
         ("store", bench_store),
         ("wire", bench_wire),
+        ("lifecycle", bench_lifecycle),
         ("roofline", bench_roofline),
     ]
     if args.only:

@@ -23,6 +23,10 @@ Layers:
 * ``tensor_lattice``— join-semilattices over JAX pytrees: versioned chunk
                       stores and dot-stores for replicating ML training
                       state across pods (the framework integration).
+
+Key lifecycle (TTL/expiry lattice, acked reaper GC, read-replica
+subscriptions) is the sibling package :mod:`repro.lifecycle`;
+``LatticeStore`` carries its per-key ``(epoch, expiry)`` component.
 """
 
 from .dots import CausalContext, Dot, DotFun, DotMap, DotSet, causal_join

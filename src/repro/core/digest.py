@@ -25,6 +25,14 @@ The digest of a :class:`~repro.core.store.LatticeStore` has two parts:
                  Equal hashes ⇒ equal values ⇒ nothing ships; a
                  representation-sensitive false mismatch only costs a
                  redundant (idempotent) re-ship, never a missed update.
+* ``life``     — per key with non-bottom lifecycle state: the
+                 ``(epoch, expiry)`` pair (``repro.lifecycle``). Epochs
+                 gate the other two sections: rows/hashes only compare
+                 within one incarnation, a requester at a *higher* epoch
+                 needs nothing for the key (its tombstone absorbs
+                 whatever the responder still holds), and a requester at
+                 a *lower* epoch gets the key wholesale — so pull-sync
+                 propagates reaps and never resurrects them.
 
 ``digest_diff(store, digest)`` is the responder's half: the sub-delta of
 ``store`` that the digest's owner lacks. Its load-bearing property (the
@@ -54,6 +62,7 @@ from typing import Any, Dict, Tuple
 
 import numpy as np
 
+from ..lifecycle.lattice import LIFE_BOTTOM, Life
 from .store import LatticeStore, _tensorstate_cls
 
 
@@ -99,23 +108,31 @@ class StoreDigest:
 
     tensors: Dict[Tuple[str, str], np.ndarray] = field(default_factory=dict)
     opaque: Dict[str, bytes] = field(default_factory=dict)
+    life: Dict[str, Life] = field(default_factory=dict)
+
+    def epoch_of(self, key: str) -> int:
+        return self.life.get(key, LIFE_BOTTOM)[0]
 
     def __eq__(self, other: object) -> bool:
         if not isinstance(other, StoreDigest):
             return NotImplemented
         return (self.opaque == other.opaque
+                and self.life == other.life
                 and set(self.tensors) == set(other.tensors)
                 and all(np.array_equal(v, other.tensors[k])
                         for k, v in self.tensors.items()))
 
     def __repr__(self) -> str:
         return (f"StoreDigest({len(self.tensors)} tensor cols, "
-                f"{len(self.opaque)} opaque keys)")
+                f"{len(self.opaque)} opaque keys, "
+                f"{len(self.life)} life keys)")
 
 
 def store_digest(store: LatticeStore) -> StoreDigest:
     """Summarize ``store``: dense per-chunk version columns for tensor
-    values, content hashes for everything else."""
+    values, content hashes for everything else, plus every key's
+    non-bottom lifecycle state (expiries and tombstones pull-sync like
+    any other state)."""
     ts_cls = _tensorstate_cls()
     out = StoreDigest()
     for key, val in store.entries:
@@ -125,7 +142,29 @@ def store_digest(store: LatticeStore) -> StoreDigest:
                 out.tensors[(key, name)] = dense_versions(ct)
         else:
             out.opaque[key] = opaque_hash(val)
+    out.life.update(store.life)
     return out
+
+
+def life_diff(life, shipped_keys, known_life) -> list:
+    """The life entries a digest response must carry: every entry
+    strictly above the peer's (``known_life`` None ⇒ unfiltered: all of
+    them), plus an ``(epoch, -inf)`` stamp for any *shipped* key at a
+    past-0 epoch whose full life entry is lex-dominated — an unstamped
+    value would join at epoch 0 and be absorbed by the requester's own
+    lifecycle state. The single implementation behind both responders
+    (object-mode :func:`digest_diff` and the wire encoder's
+    ``encode_store(known_life=...)``), so the no-resurrection invariant
+    cannot drift between modes. Returns sorted ``(key, Life)`` pairs."""
+    out = [(k, lv) for k, lv in life
+           if known_life is None or lv > known_life.get(k, LIFE_BOTTOM)]
+    have = {k for k, _ in out}
+    life_map = dict(life)
+    for key in shipped_keys:
+        epoch = life_map.get(key, LIFE_BOTTOM)[0]
+        if epoch and key not in have:
+            out.append((key, (epoch, LIFE_BOTTOM[1])))
+    return sorted(out)
 
 
 def versions_at(known: np.ndarray, idx: np.ndarray,
@@ -145,13 +184,25 @@ def digest_diff(store: LatticeStore, digest: StoreDigest) -> LatticeStore:
     per tensor, only the chunk rows whose version strictly exceeds the
     digest's version at that position (as sparse row sets); per opaque
     key, the whole value iff its content hash differs; keys absent from
-    the digest ship wholesale. Always ≤ ``store``, and join-equivalent to
-    it for the digest's owner (module docstring)."""
+    the digest ship wholesale. Lifecycle-aware: life entries ship iff
+    strictly above the digest's (tombstones and expiry extensions
+    propagate through pull), a key whose digest epoch *exceeds* the
+    responder's ships nothing (the requester's tombstone absorbs it),
+    and version/hash filters only apply within the same incarnation —
+    an epoch-0 version column must never suppress epoch-1 rows. Always
+    ≤ ``store``, and join-equivalent to it for the digest's owner
+    (module docstring)."""
     ts_cls = _tensorstate_cls()
+    la = dict(store.life)
     out: Dict[str, Any] = {}
     for key, val in store.entries:
+        epoch = la.get(key, LIFE_BOTTOM)[0]
+        q_epoch = digest.epoch_of(key)
+        if q_epoch > epoch:
+            continue                 # requester's incarnation dominates
+        same_epoch = q_epoch == epoch
         if ts_cls is None or not isinstance(val, ts_cls):
-            h = digest.opaque.get(key)
+            h = digest.opaque.get(key) if same_epoch else None
             if h is None or h != opaque_hash(val):
                 out[key] = val
             continue
@@ -159,7 +210,8 @@ def digest_diff(store: LatticeStore, digest: StoreDigest) -> LatticeStore:
         chunks: Dict[str, Any] = {}
         for name, ct in val.chunks:
             idx, vals, vers = live_rows(ct)
-            known = digest.tensors.get((key, name))
+            known = (digest.tensors.get((key, name)) if same_epoch
+                     else None)
             if known is not None and idx.size:
                 keep = vers > versions_at(known, idx, vers.dtype)
                 idx, vals, vers = idx[keep], vals[keep], vers[keep]
@@ -167,4 +219,5 @@ def digest_diff(store: LatticeStore, digest: StoreDigest) -> LatticeStore:
                 chunks[name] = sparse_chunks(ct.shape[0], idx, vals, vers)
         if chunks:
             out[key] = ts_cls.of(chunks, lamport=val.lamport)
-    return LatticeStore.of(out)
+    return LatticeStore(tuple(sorted(out.items())),
+                        tuple(life_diff(store.life, out, digest.life)))

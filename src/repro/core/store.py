@@ -30,17 +30,30 @@ the objects/sec win measured by ``benchmarks/bench_store.py``. The
 per-key Python loop remains as the fallback (``batched=False``, or
 automatically for keys whose tensors cannot be stacked).
 
+**Key lifecycle** (``repro.lifecycle``): alongside each value the store
+carries a per-key :data:`~repro.lifecycle.lattice.Life` ``(epoch,
+expiry)`` — the lexicographic lifecycle lattice. The per-key state is the
+lex product ``Life ×lex Value``: equal epochs join expiries (max) and
+values (pointwise) as ever; a higher epoch wins wholesale, so a compact
+*tombstone* (bumped epoch, no value) ⊥-absorbs every straggler delta
+from the reaped incarnation. Keys never touched by the lifecycle
+subsystem sit at ``LIFE_BOTTOM`` (canonically absent from ``life``), so
+plain stores behave exactly as before.
+
 Replica integration lives in :mod:`repro.core.propagation`: ``Replica``'s
 durable state is a ``LatticeStore`` (single-object replicas are one-key
 stores behind a view property), and ``StoreReplica`` exposes the keyed
 API. Hash-sharded key ownership is :mod:`repro.sync.membership`
-(``KeyOwnership`` / ``ShardByKey``).
+(``KeyOwnership`` / ``ShardByKey``); the expiry/reaper machinery is
+:mod:`repro.lifecycle`.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, FrozenSet, Iterable, List, Mapping, Tuple
+
+from ..lifecycle.lattice import LIFE_BOTTOM, Life, life_join
 
 
 def _is_bottom(value: Any) -> bool:
@@ -50,9 +63,15 @@ def _is_bottom(value: Any) -> bool:
 
 @dataclass(frozen=True, eq=False)
 class LatticeStore:
-    """key → lattice value, itself a join-semilattice (pointwise order)."""
+    """key → lattice value, itself a join-semilattice (pointwise order).
+
+    ``life`` is the per-key lifecycle component (epoch, expiry) — see the
+    module docstring; an entry's value lives *at* its key's life epoch.
+    ``LIFE_BOTTOM`` entries are canonically absent.
+    """
 
     entries: Tuple[Tuple[str, Any], ...] = ()
+    life: Tuple[Tuple[str, Life], ...] = ()
 
     # -- construction -----------------------------------------------------------
     @staticmethod
@@ -60,13 +79,28 @@ class LatticeStore:
         return LatticeStore()
 
     @staticmethod
-    def of(mapping: Mapping[str, Any]) -> "LatticeStore":
-        return LatticeStore(tuple(sorted(mapping.items())))
+    def of(mapping: Mapping[str, Any],
+           life: Mapping[str, Life] = ()) -> "LatticeStore":
+        return LatticeStore(tuple(sorted(mapping.items())),
+                            _canon_life(dict(life).items()))
 
     @staticmethod
     def key_delta(key: str, delta_value: Any) -> "LatticeStore":
         """δ-mutator lift: a store delta touching exactly one key."""
         return LatticeStore(((key, delta_value),))
+
+    @staticmethod
+    def life_delta(key: str, life: Life) -> "LatticeStore":
+        """A store delta carrying only lifecycle state for ``key`` — a
+        touch (expiry extension) or, with a bumped epoch, a tombstone."""
+        return LatticeStore((), _canon_life([(key, life)]))
+
+    def with_life(self, key: str, life: Life) -> "LatticeStore":
+        """This store with ``life`` joined into ``key``'s lifecycle —
+        how a write delta is stamped with the epoch/TTL it targets."""
+        m = dict(self.life)
+        m[key] = life_join(m.get(key, LIFE_BOTTOM), life)
+        return LatticeStore(self.entries, _canon_life(m.items()))
 
     # -- views ------------------------------------------------------------------
     def as_dict(self) -> Dict[str, Any]:
@@ -74,6 +108,28 @@ class LatticeStore:
 
     def keys(self) -> FrozenSet[str]:
         return frozenset(k for k, _ in self.entries)
+
+    def all_keys(self) -> FrozenSet[str]:
+        """Keys with *any* state — a value, an expiry, or a tombstone.
+        Sharding/handoff/reaping must iterate this, not ``keys()``:
+        tombstones carry no value but must still route and replicate."""
+        return self.keys() | frozenset(k for k, _ in self.life)
+
+    def life_of(self, key: str) -> Life:
+        return dict(self.life).get(key, LIFE_BOTTOM)
+
+    def tombstoned(self, key: str) -> bool:
+        """Reaped and not revived: a past-0 epoch holding no value."""
+        return self.life_of(key)[0] > 0 and key not in self.as_dict()
+
+    def tombstoned_keys(self) -> FrozenSet[str]:
+        """All tombstoned keys in ONE pass — polling loops ("is the
+        whole fleet reaped yet?") should use this instead of calling
+        :meth:`tombstoned` per key, which rebuilds both dicts each
+        call."""
+        held = {k for k, _ in self.entries}
+        return frozenset(k for k, (epoch, _) in self.life
+                         if epoch > 0 and k not in held)
 
     def get(self, key: str, typ=None):
         """Value at ``key``; ``typ.bottom()`` (or None) when absent."""
@@ -84,9 +140,13 @@ class LatticeStore:
 
     def restrict(self, keys: Iterable[str]) -> "LatticeStore":
         """Sub-store of the given keys (the ownership-sharding projection).
-        Always ≤ self, so joining a restriction is always safe."""
+        Always ≤ self, so joining a restriction is always safe. Carries
+        the kept keys' lifecycle state too — tombstones shard and hand
+        off like values."""
         keep = set(keys)
         return LatticeStore(tuple((k, v) for k, v in self.entries
+                                  if k in keep),
+                            tuple((k, lv) for k, lv in self.life
                                   if k in keep))
 
     # -- δ-mutator lift ----------------------------------------------------------
@@ -105,31 +165,61 @@ class LatticeStore:
         return LatticeStore.key_delta(key, fn(self.get(key, typ)))
 
     # -- lattice ----------------------------------------------------------------
+    def _epochs(self) -> Dict[str, int]:
+        """key → nonzero life epoch (absent ⇒ 0) — the part of the
+        lifecycle that decides which side's value contributes to a join."""
+        return {k: lv[0] for k, lv in self.life if lv[0]}
+
     def join(self, other: "LatticeStore", *,
              batched: bool = True) -> "LatticeStore":
-        if batched:
-            fast = _stacked_fast_join(self, other)
+        life = _joined_life(self.life, other.life)
+        if batched and self._epochs() == other._epochs():
+            # identical epochs per key ⇒ every value joins pointwise, so
+            # the stacked single-launch fast path stays valid
+            fast = _stacked_fast_join(self, other, life)
             if fast is not None:
                 return fast
         a, b = self.as_dict(), other.as_dict()
+        la, lb = dict(self.life), dict(other.life)
         out: Dict[str, Any] = {}
         pending: List[Tuple[str, Any, Any]] = []
         for k in set(a) | set(b):
-            if k not in a:
-                out[k] = b[k]
-            elif k not in b:
-                out[k] = a[k]
-            elif batched and _both_tensorstates(a[k], b[k]):
-                pending.append((k, a[k], b[k]))
+            # lex product: only values at the winning epoch contribute —
+            # a higher-epoch tombstone on either side absorbs the other
+            ea = la.get(k, LIFE_BOTTOM)[0]
+            eb = lb.get(k, LIFE_BOTTOM)[0]
+            va = a.get(k) if ea >= eb else None
+            vb = b.get(k) if eb >= ea else None
+            if va is None and vb is None:
+                continue
+            if vb is None:
+                out[k] = va
+            elif va is None:
+                out[k] = vb
+            elif batched and _both_tensorstates(va, vb):
+                pending.append((k, va, vb))
             else:
-                out[k] = a[k].join(b[k])
+                out[k] = va.join(vb)
         if pending:
             out.update(_batched_join_tensorstates(pending))
-        return LatticeStore.of(out)
+        return LatticeStore(tuple(sorted(out.items())), life)
 
     def leq(self, other: "LatticeStore") -> bool:
+        la, lb = dict(self.life), dict(other.life)
         b = other.as_dict()
-        for k, v in self.entries:
+        a = self.as_dict()
+        for k in set(a) | set(la):
+            ea, xa = la.get(k, LIFE_BOTTOM)
+            eb, xb = lb.get(k, LIFE_BOTTOM)
+            if ea > eb:
+                return False
+            if ea < eb:
+                continue          # other's epoch absorbs this key entirely
+            if xa > xb:
+                return False
+            v = a.get(k)
+            if v is None:
+                continue
             if k in b:
                 if not v.leq(b[k]):
                     return False
@@ -140,6 +230,8 @@ class LatticeStore:
     def __eq__(self, other: object) -> bool:
         if not isinstance(other, LatticeStore):
             return NotImplemented
+        if dict(_canon_life(self.life)) != dict(_canon_life(other.life)):
+            return False
         a, b = self.as_dict(), other.as_dict()
         for k in set(a) | set(b):
             if k not in a or k not in b:
@@ -154,22 +246,49 @@ class LatticeStore:
         raise TypeError("unhashable")
 
     def decompose(self) -> list:
-        """Join-decomposition: per key, the embedded value's atoms (when it
+        """Join-decomposition: per key, one lifecycle atom (when the key
+        has non-bottom life) plus the embedded value's atoms (when it
         decomposes) each wrapped as a single-key store; else one atom per
-        key. Lets RemoveRedundant trim store payloads key-by-key (and
-        finer, where the value supports it)."""
+        key. Value atoms of a past-0 epoch carry that epoch (with the
+        expiry at bottom) so re-joining them lands in the right
+        incarnation. Lets RemoveRedundant trim store payloads key-by-key
+        (and finer, where the value supports it)."""
         atoms = []
+        la = dict(self.life)
+        for k, lv in self.life:
+            atoms.append(LatticeStore((), ((k, lv),)))
         for k, v in self.entries:
+            epoch = la.get(k, LIFE_BOTTOM)[0]
+            lf = ((k, (epoch, LIFE_BOTTOM[1])),) if epoch else ()
             sub = getattr(v, "decompose", None)
             if sub is None:
-                atoms.append(LatticeStore.key_delta(k, v))
+                atoms.append(LatticeStore(((k, v),), lf))
             else:
-                atoms.extend(LatticeStore.key_delta(k, a) for a in sub())
+                atoms.extend(LatticeStore(((k, a),), lf) for a in sub())
         return atoms
 
     def __repr__(self) -> str:
         inner = ", ".join(f"{k}: {type(v).__name__}" for k, v in self.entries)
-        return f"LatticeStore({{{inner}}})"
+        tombs = len(self.tombstoned_keys())
+        extra = f", {tombs} tombstones" if tombs else ""
+        return f"LatticeStore({{{inner}}}{extra})"
+
+
+def _canon_life(items) -> Tuple[Tuple[str, Life], ...]:
+    """Sorted life tuple with bottoms dropped (absent ≡ LIFE_BOTTOM)."""
+    return tuple(sorted((k, lv) for k, lv in items if lv != LIFE_BOTTOM))
+
+
+def _joined_life(a, b) -> Tuple[Tuple[str, Life], ...]:
+    if not a:
+        return _canon_life(b)
+    if not b:
+        return _canon_life(a)
+    m = dict(a)
+    for k, lv in b:
+        cur = m.get(k)
+        m[k] = lv if cur is None else life_join(cur, lv)
+    return _canon_life(m.items())
 
 
 # ---------------------------------------------------------------------------
@@ -274,12 +393,15 @@ def _stack_store(store: LatticeStore):
 
 
 def _stacked_fast_join(a_store: LatticeStore,
-                       b_store: LatticeStore):
+                       b_store: LatticeStore,
+                       life: Tuple[Tuple[str, Life], ...] = ()):
     """Aligned-layout fast path: when both stores stack to the identical
     (key, name, rows) signature — the steady state of a resident store
     joining full-coverage deltas — the whole join is ONE kernel launch
     over the cached columns. Returns None when the layouts differ (the
-    general per-segment path handles subsets and mismatches)."""
+    general per-segment path handles subsets and mismatches). ``life``
+    is the pre-joined lifecycle component (the caller has already
+    checked both sides agree on epochs, so values join pointwise)."""
     import numpy as np
 
     sa = _stack_store(a_store)
@@ -316,7 +438,7 @@ def _stacked_fast_join(a_store: LatticeStore,
                                                overn[start:stop])))
         out_entries.append((key, TensorState(tuple(chunks),
                                              max(A.lamport, B.lamport))))
-    result = LatticeStore(tuple(out_entries))
+    result = LatticeStore(tuple(out_entries), life)
     object.__setattr__(result, "_stacked_cache",
                        _StackedChunks(ovn, overn, layout, sa.sig))
     return result
@@ -399,7 +521,9 @@ def digest_select_store(store: LatticeStore, budget_bytes: int,
     ranking (``tensor_lattice.digest_keep_plan``, scope = store key) — so
     the budget picks *keys* by digest, not just chunks within one object.
     Non-tensor values pass through untouched (they are not
-    chunk-addressable; the policy budgets tensor payload). The result is
+    chunk-addressable; the policy budgets tensor payload). Lifecycle
+    state rides through whole — trimming a tombstone or expiry to save a
+    few bytes would only delay its propagation. The result is
     ≤ ``store`` pointwise, so joining it is always safe."""
     from .tensor_lattice import (TensorState, digest_keep_plan,
                                  mask_kept_chunks)
@@ -423,4 +547,4 @@ def digest_select_store(store: LatticeStore, budget_bytes: int,
                 if keep.get((key, name))}
         if kept:
             out[key] = TensorState.of(kept, lamport=val.lamport)
-    return LatticeStore.of(out)
+    return LatticeStore(tuple(sorted(out.items())), store.life)

@@ -68,6 +68,13 @@ def main() -> None:
                          "implies 3 gateways unless --replicate is set)")
     ap.add_argument("--session-replication", type=int, default=2,
                     help="replicas per session key under --sessions")
+    ap.add_argument("--session-ttl", type=float, default=None,
+                    metavar="SECONDS",
+                    help="key lifecycle for --sessions: every session "
+                         "key expires SECONDS (sim time) after its last "
+                         "write, and the owner-driven reaper drops it to "
+                         "a tombstone once the whole replica set acks "
+                         "the expiry (repro.lifecycle)")
     ap.add_argument("--no-wire", dest="wire", action="store_false",
                     help="gossip Python objects instead of binary δ-wire "
                          "frames (frames are the default: gateways move "
@@ -182,7 +189,10 @@ def _wire_codec(args):
 def _keyed_sessions(args) -> None:
     """N session objects in a keyed LatticeStore across gateways, with
     rendezvous-hash-sharded ownership: gossip ships each session only to
-    the gateways that replicate it."""
+    the gateways that replicate it. Under ``--session-ttl`` each key
+    also carries an expiry touched on every write, and the owner-driven
+    reaper tombstones it once the whole replica set acks the expiry —
+    the store *shrinks* again after the sessions complete."""
     from repro.sync import KeyOwnership, ShardByKey
 
     wire = _wire_codec(args)
@@ -194,12 +204,16 @@ def _keyed_sessions(args) -> None:
     nodes = [sim.add_node(StoreReplica(
         i, [j for j in ids if j != i], causal=True,
         policy=Compose(make_policy(args.ship_policy), ShardByKey(ownership)),
-        rng=random.Random(args.seed + k), ownership=ownership, wire=wire))
+        rng=random.Random(args.seed + k), ownership=ownership, wire=wire,
+        ttl=args.session_ttl or None))    # 0 ⇒ lifecycle off, like unset
         for k, i in enumerate(ids)]
 
     # gossip runs concurrently with ingest: register the periodic
     # anti-entropy (and GC) ticks before the first write
     for n in nodes:
+        if args.session_ttl:
+            from repro.lifecycle import ReaperProtocol
+            ReaperProtocol(n, ownership, grace=1.0, retry=2.0)
         sim.every(1.0, n.on_periodic)
         sim.every(7.0, n.gc_deltas)
 
@@ -242,6 +256,30 @@ def _keyed_sessions(args) -> None:
           f"{', binary δ-wire frames' if wire is not None else ''}): "
           f"all owner replicas settled to 'done'")
     print(f"    keys per gateway: {per_gw}   {unit}={payload}")
+
+    if args.session_ttl:
+        # every session saw its last write above; run the clock past the
+        # TTL and let the acked reaper drain the store back down
+
+        def all_reaped() -> bool:
+            tombs = {i: by_id[i].X.tombstoned_keys() for i in ids}
+            return all(key in tombs[w]
+                       for key in keys for w in ownership.owners(key))
+
+        t0 = sim.time
+        while sim.time - t0 < args.session_ttl + 10_000:
+            sim.run_for(5.0)
+            if all_reaped():
+                break
+        tombs = {i: by_id[i].X.tombstoned_keys() for i in ids}
+        reaped = {i: sum(1 for key in keys if key in tombs[i])
+                  for i in ids}
+        resident = {i: len(by_id[i].X.entries) for i in ids}
+        assert all_reaped(), "sessions past their TTL were not reaped"
+        print(f"  [lifecycle] ttl={args.session_ttl}s: all {args.sessions} "
+              f"sessions expired and were reaped by their owners' ack "
+              f"quorum; tombstones per gateway: {reaped}, resident "
+              f"values left: {resident}")
 
 
 if __name__ == "__main__":

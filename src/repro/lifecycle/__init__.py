@@ -1,0 +1,32 @@
+"""Key lifecycle subsystem: TTL/expiry lattice, acked reaper GC, and the
+helpers behind read-replica subscriptions.
+
+The first subsystem that makes system-level state **non-monotone** while
+every individual join stays a lattice join:
+
+* ``lattice`` — the per-key ``(epoch, expiry)`` lifecycle lattice that
+  :class:`~repro.core.store.LatticeStore` folds in next to each value
+  (lex order: epochs totally ordered, expiry max-joined within an
+  epoch). A *tombstone* is a bumped epoch with no value — compact, and
+  ⊥-absorbing for every straggler delta of the reaped incarnation.
+* ``reaper`` — the owner-driven reap protocol: the key's rendezvous
+  owner proposes a reap once the expiry passes, collects ``reap-ack``
+  frames from the key's whole write replica set, and only then commits
+  the tombstone as an ordinary δ-mutation that gossips through the
+  normal anti-entropy machinery.
+
+Read replicas ride on :class:`~repro.sync.membership.KeyOwnership`'s
+``reads()``/``subscribe()`` surface (write set vs the wider read set):
+a subscriber pulls a hot key's rows via digest-sync without joining the
+write replica set — or the reap quorum.
+"""
+
+from .lattice import (LIFE_BOTTOM, Life, NO_EXPIRY, expired, is_live,
+                      life_join, tombstone, touch)
+from .reaper import ReaperProtocol
+
+__all__ = [
+    "LIFE_BOTTOM", "Life", "NO_EXPIRY", "expired", "is_live",
+    "life_join", "tombstone", "touch",
+    "ReaperProtocol",
+]

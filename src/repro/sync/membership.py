@@ -169,40 +169,62 @@ class KeyOwnership:
     ``lambda: cluster_replica.X.workers()`` so ownership re-shuffles as
     the gossiped membership OR-Set changes (join/leave), with rendezvous
     hashing keeping the re-shuffle minimal. ``replication`` is the number
-    of replicas per key (the key's replica set = its owners)."""
+    of replicas per key (the key's **write** replica set = its owners).
+
+    The *read* set is wider: ``read_replication`` statically extends
+    every key's readers to the next rendezvous-ranked workers, and
+    :meth:`subscribe` dynamically adds a specific worker to a specific
+    hot key's readers. Readers receive the key's gossip through
+    digest-sync pull (``ShardByKey.restrict_pull`` routes by
+    ``reads``), but stay out of the write set — they are not pushed to,
+    never buffer/forward the key, and never gate its reap quorum."""
 
     _CACHE_MAX = 1 << 16    # bound the per-key memo (serving keyspaces
                             # are unbounded; rendezvous recompute is cheap)
 
     def __init__(self, workers: Union[Iterable[ReplicaId],
                                       Callable[[], Iterable[ReplicaId]]],
-                 replication: int = 1):
+                 replication: int = 1,
+                 read_replication: Optional[int] = None):
         if replication < 1:
             raise ValueError(f"replication must be ≥ 1, got {replication}")
+        if read_replication is not None and read_replication < replication:
+            raise ValueError(
+                f"read_replication must be ≥ replication "
+                f"({replication}), got {read_replication}")
         self._workers = workers
         self.replication = replication
+        self.read_replication = (replication if read_replication is None
+                                 else read_replication)
         # owners() sits on the gossip hot path (ShardByKey consults it per
-        # key per destination per round): memoize per key, invalidated
-        # whenever the live worker set changes
+        # key per destination per round): memoize the read-width ranking
+        # per key (owners = its prefix), invalidated whenever the live
+        # worker set changes
         self._cache_workers: Tuple[ReplicaId, ...] = ()
         self._cache: Dict[str, Tuple[ReplicaId, ...]] = {}
+        # dynamic hot-key subscriptions: key → workers that asked to read
+        self._subs: Dict[str, set] = {}
 
     def workers(self) -> Tuple[ReplicaId, ...]:
         ws = self._workers() if callable(self._workers) else self._workers
         return tuple(sorted(ws))
 
-    def owners(self, key: str) -> Tuple[ReplicaId, ...]:
+    def _ranked(self, key: str) -> Tuple[ReplicaId, ...]:
         ws = self.workers()
         if ws != self._cache_workers:
             self._cache_workers = ws       # membership changed: re-shuffle
             self._cache = {}
         hit = self._cache.get(key)
         if hit is None:
-            hit = owners_for_key(key, ws, self.replication) if ws else ()
+            hit = (owners_for_key(key, ws, self.read_replication)
+                   if ws else ())
             if len(self._cache) >= self._CACHE_MAX:
                 self._cache.clear()
             self._cache[key] = hit
         return hit
+
+    def owners(self, key: str) -> Tuple[ReplicaId, ...]:
+        return self._ranked(key)[:self.replication]
 
     def owner(self, key: str) -> Optional[ReplicaId]:
         """The primary (top-scoring) owner, or None with no workers."""
@@ -211,6 +233,35 @@ class KeyOwnership:
 
     def replicates(self, worker: ReplicaId, key: str) -> bool:
         return worker in self.owners(key)
+
+    # -- the wider read set ------------------------------------------------------
+    def subscribe(self, worker: ReplicaId, key: str) -> None:
+        """Add ``worker`` to ``key``'s readers (a hot key it wants to
+        serve locally). Pull responses start routing the key to it on
+        the next digest exchange; nothing else changes — no write-set
+        membership, no reap-quorum seat."""
+        self._subs.setdefault(key, set()).add(worker)
+
+    def unsubscribe(self, worker: ReplicaId, key: str) -> None:
+        subs = self._subs.get(key)
+        if subs is not None:
+            subs.discard(worker)
+            if not subs:
+                del self._subs[key]
+
+    def readers(self, key: str) -> Tuple[ReplicaId, ...]:
+        """The key's read set: the write owners, the statically wider
+        ``read_replication`` rank prefix, and any live subscribers."""
+        ranked = self._ranked(key)
+        subs = self._subs.get(key)
+        if not subs:
+            return ranked
+        live = set(self.workers())
+        extra = sorted(w for w in subs if w in live and w not in ranked)
+        return ranked + tuple(extra)
+
+    def reads(self, worker: ReplicaId, key: str) -> bool:
+        return worker in self.readers(key)
 
 
 class ShardByKey(ShippingPolicy):
@@ -229,6 +280,15 @@ class ShardByKey(ShippingPolicy):
     replicas no longer holds (and ``ghost_check``, which asserts exactly
     that equivalence, must stay off). Acks remain truthful for the shard
     the receiver is responsible for, which is all it serves.
+
+    Push traffic routes by the **write** set (``replicates``); pull
+    responses route by the wider **read** set (``reads``) — that split
+    is what makes read replicas work: a subscriber's digest request
+    comes back with its hot keys' rows, while nobody ever pushes to it
+    or waits on it. Key enumeration uses ``all_keys()``, so lifecycle
+    tombstones (which hold no value) shard, ship, and hand off exactly
+    like values — a reaped key must reach its whole replica set or
+    stragglers could resurrect it.
     """
 
     def __init__(self, ownership: KeyOwnership):
@@ -236,7 +296,7 @@ class ShardByKey(ShippingPolicy):
         self.name = f"shard:{ownership.replication}"
 
     def _dst_keys(self, dst: ReplicaId, store: LatticeStore):
-        return [k for k in store.keys()
+        return [k for k in store.all_keys()
                 if self.ownership.replicates(dst, k)]
 
     def include(self, replica, dst, index, entry) -> bool:
@@ -261,12 +321,14 @@ class ShardByKey(ShippingPolicy):
         return delta.restrict(self._dst_keys(dst, delta))
 
     def restrict_pull(self, replica, dst, store):
-        """Digest responses shard like every other payload: a requester
-        never receives keys it does not replicate (a pure routing
-        restriction, which is all the pull hook permits)."""
+        """Digest responses route by the READ set: a requester receives
+        the keys it replicates *or subscribes to* (a pure routing
+        restriction, which is all the pull hook permits) — this is the
+        entire transport story of read replicas."""
         if not isinstance(store, LatticeStore):
             return store
-        return store.restrict(self._dst_keys(dst, store))
+        return store.restrict(k for k in store.all_keys()
+                              if self.ownership.reads(dst, k))
 
 
 class RebalanceHandoff:
@@ -315,7 +377,7 @@ class RebalanceHandoff:
         # acks in flight across the change should credit.
         self.replica._known.clear()
         by_dst: Dict[ReplicaId, list] = {}
-        for key in store.keys():
+        for key in store.all_keys():    # tombstones hand off like values
             old = (owners_for_key(key, prev, self.ownership.replication)
                    if prev else ())
             if self.replica.id not in old:

@@ -16,6 +16,15 @@ packs into one contiguous byte payload:
   contiguous and sorted by chunk position).
 * Non-tensor lattice values (counters, OR-Sets, registers, membership
   views, dot stores, …) ride as tagged opaque bodies per key.
+* Per-key lifecycle state (``repro.lifecycle``: epoch + LWW expiry,
+  tombstones included) rides in a trailing life table — reaped keys
+  cost one ``(key, epoch, expiry)`` row, and the digest filter
+  (``known_life``) is epoch-aware so pull responses propagate reaps and
+  never resurrect them.
+* Each signature group's stacked columns may be zlib-deflated behind a
+  per-group flag byte (``encode_store(compress=True)`` /
+  ``WireCodec(compress=True)``) — self-describing, off by default
+  because compressed columns cannot be zero-copy ingested.
 
 Decoding is **zero-copy for the columns**: each tensor comes back as a
 :class:`~repro.core.tensor_lattice.SparseChunks` whose ``idx``/``vals``/
@@ -33,19 +42,22 @@ from __future__ import annotations
 
 import pickle
 import struct
+import zlib
 from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
-from ..core.digest import StoreDigest, opaque_hash, versions_at
+from ..core.digest import StoreDigest, life_diff, opaque_hash, versions_at
 from ..core.store import LatticeStore
 from ..core.tensor_lattice import SparseChunks, TensorState, live_rows
+from ..lifecycle.lattice import LIFE_BOTTOM, Life
 
 _U8 = struct.Struct("<B")
 _U16 = struct.Struct("<H")
 _U32 = struct.Struct("<I")
 _U64 = struct.Struct("<Q")
 _II = struct.Struct("<II")
+_LIFE = struct.Struct("<Id")     # (epoch u32, expiry f64) per life entry
 
 _KIND_TENSOR = 0
 _KIND_OPAQUE = 1
@@ -108,31 +120,50 @@ class _Cursor:
 def encode_store(store: LatticeStore,
                  known_versions: Optional[Mapping[Tuple[str, str],
                                                   np.ndarray]] = None,
-                 known_opaque: Optional[Mapping[str, bytes]] = None
-                 ) -> bytes:
+                 known_opaque: Optional[Mapping[str, bytes]] = None,
+                 known_life: Optional[Mapping[str, Life]] = None,
+                 compress: bool = False) -> bytes:
     """Pack a whole store delta into one stacked, columnar byte payload.
 
-    ``known_versions`` / ``known_opaque`` are the two halves of a peer's
-    :class:`~repro.core.digest.StoreDigest` and turn the encoder into the
-    responder of a digest exchange: chunk rows whose version the digest
-    already covers are dropped **while the columns are being built**
-    (no filtered intermediate store is materialized), opaque keys with a
-    matching content hash are dropped whole, and a tensor key none of
-    whose rows survive is elided from the key table entirely. With both
-    filters unset the output is byte-identical to the unfiltered format.
+    ``known_versions`` / ``known_opaque`` / ``known_life`` are the three
+    sections of a peer's :class:`~repro.core.digest.StoreDigest` and turn
+    the encoder into the responder of a digest exchange: chunk rows whose
+    version the digest already covers are dropped **while the columns are
+    being built** (no filtered intermediate store is materialized),
+    opaque keys with a matching content hash are dropped whole, and a
+    tensor key none of whose rows survive is elided from the key table
+    entirely. Lifecycle-aware (``repro.lifecycle``): life entries ship
+    iff strictly above the peer's, a key the peer has tombstoned *past*
+    contributes nothing at all, and version/hash filters only compare
+    within the same incarnation. With the filters unset the output is
+    byte-identical to the unfiltered format.
+
+    ``compress`` zlib-compresses each signature group's stacked columns
+    (the dominant bytes of a tensor payload) — flagged per group in the
+    payload, so decoders need no out-of-band signal. Off by default:
+    compressed columns cannot be zero-copy ingested.
     """
     out = bytearray()
+    life_map = dict(store.life)
+
+    def peer_epoch(key: str) -> int:
+        return known_life.get(key, LIFE_BOTTOM)[0] if known_life else 0
 
     # -- filter pass: surviving rows per tensor, surviving keys -----------------
     entries: List[Tuple[str, int, Any]] = []    # (key, kind, value)
     rows_of: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
     for key, val in store.entries:
+        epoch = life_map.get(key, LIFE_BOTTOM)[0]
+        if known_life is not None and peer_epoch(key) > epoch:
+            continue                # peer's tombstone absorbs this key
+        same_epoch = peer_epoch(key) == epoch
         if isinstance(val, TensorState):
             key_rows = []
             for name, ct in val.chunks:
                 idx, vals, vers = live_rows(ct)
                 known = (known_versions.get((key, name))
-                         if known_versions is not None else None)
+                         if known_versions is not None and same_epoch
+                         else None)
                 if known is not None and idx.size:
                     keep = vers > versions_at(known, idx, vers.dtype)
                     idx, vals, vers = idx[keep], vals[keep], vers[keep]
@@ -143,10 +174,16 @@ def encode_store(store: LatticeStore,
             entries.append((key, _KIND_TENSOR, val))
             rows_of.extend(key_rows)
         else:
-            if (known_opaque is not None
+            if (known_opaque is not None and same_epoch
                     and known_opaque.get(key) == opaque_hash(val)):
                 continue            # peer holds this exact value
             entries.append((key, _KIND_OPAQUE, val))
+
+    # life entries the peer provably lacks, epoch-stamping every
+    # surviving key — shared with the object-mode responder so the
+    # no-resurrection invariant cannot drift between modes
+    life_out = life_diff(store.life, [k for k, _, _ in entries],
+                         known_life)
 
     # -- key table ------------------------------------------------------------
     out += _U32.pack(len(entries))
@@ -201,18 +238,58 @@ def encode_store(store: LatticeStore,
             out += _U32.pack(rows)
             total += rows
         out += _U32.pack(total)
-        _pad8(out)
-        for desc_i in members:                       # chunk-index column
-            out += np.ascontiguousarray(
-                rows_by_desc[desc_i][0], dtype=np.int32).tobytes()
-        _pad8(out)
-        for desc_i in members:                       # versions column
-            out += np.ascontiguousarray(rows_by_desc[desc_i][2]).tobytes()
-        _pad8(out)
-        for desc_i in members:                       # stacked values column
-            out += np.ascontiguousarray(rows_by_desc[desc_i][1]).tobytes()
-        _pad8(out)
+        out += _U8.pack(1 if compress else 0)
+        if compress:
+            # per-group column compression: the three stacked columns,
+            # laid out exactly as the plain format but relative to their
+            # own buffer, deflated as one zlib stream. The frame CRC
+            # still covers the compressed bytes, so corruption is caught
+            # before inflate ever runs.
+            col = bytearray()
+            _emit_columns(col, members, rows_by_desc)
+            blob = zlib.compress(bytes(col))
+            out += _U32.pack(len(blob))
+            out += blob
+        else:
+            _pad8(out)
+            _emit_columns(out, members, rows_by_desc)
+
+    # -- life table: (key, epoch, expiry) triples ---------------------------------
+    out += _U32.pack(len(life_out))
+    for key, (epoch, expiry) in life_out:
+        _put_str(out, key)
+        out += _LIFE.pack(int(epoch), float(expiry))
     return bytes(out)
+
+
+def _emit_columns(out: bytearray, members, rows_by_desc) -> None:
+    """The three stacked columns of one signature group, 8-aligned
+    relative to ``out``'s start (the payload for the plain path, a fresh
+    buffer for the compressed path)."""
+    for desc_i in members:                           # chunk-index column
+        out += np.ascontiguousarray(
+            rows_by_desc[desc_i][0], dtype=np.int32).tobytes()
+    _pad8(out)
+    for desc_i in members:                           # versions column
+        out += np.ascontiguousarray(rows_by_desc[desc_i][2]).tobytes()
+    _pad8(out)
+    for desc_i in members:                           # stacked values column
+        out += np.ascontiguousarray(rows_by_desc[desc_i][1]).tobytes()
+    _pad8(out)
+
+
+def store_body_is_empty(body) -> bool:
+    """True iff a store payload carries nothing at all — no keys and no
+    lifecycle entries. The all-filtered digest-response check: parsed
+    structurally (counts), not by byte comparison, so it stays correct
+    across body-format options (compression flags, life tables)."""
+    view = memoryview(body)
+    if len(view) < 4 or _U32.unpack_from(view, 0)[0]:
+        return False                 # malformed-short or has keys
+    # with zero keys the opaque/descriptor/group tables are empty and the
+    # life count sits at a fixed offset
+    off = 4 + 4 + 4 + 2
+    return len(view) < off + 4 or _U32.unpack_from(view, off)[0] == 0
 
 
 def decode_store(buf) -> LatticeStore:
@@ -259,10 +336,21 @@ def decode_store(buf) -> LatticeStore:
         n_members = cur.unpack(_U32)
         members = [cur.unpack(_II) for _ in range(n_members)]
         total = cur.unpack(_U32)
-        idx_col = cur.array(np.int32, total)
-        vers_col = cur.array(np.dtype(vstr), total)
-        vals_col = cur.array(np.dtype(dstr), total * chunk_w,
-                             shape=(total, chunk_w))
+        if cur.unpack(_U8):          # per-group compression flag
+            blob = cur.get_blob()
+            gcur = _Cursor(zlib.decompress(blob))
+        else:
+            gcur = cur
+        idx_col = gcur.array(np.int32, total)
+        vers_col = gcur.array(np.dtype(vstr), total)
+        vals_col = gcur.array(np.dtype(dstr), total * chunk_w,
+                              shape=(total, chunk_w))
+        if gcur is cur:
+            # consume the encoder's trailing column pad — the next group
+            # header (or the life table) starts 8-aligned, and reading
+            # it from inside the pad would silently yield zeros whenever
+            # the values column's byte length is not a multiple of 8
+            cur.align8()
         row = 0
         for desc_i, rows in members:
             key_i, name, n_chunks = descs[desc_i]
@@ -271,24 +359,36 @@ def decode_store(buf) -> LatticeStore:
                 vals_col[row:row + rows], vers_col[row:row + rows])
             row += rows
 
+    life: List[Tuple[str, Life]] = []
+    n_life = cur.unpack(_U32)
+    for _ in range(n_life):
+        key = cur.get_str()
+        epoch, expiry = cur.unpack(_LIFE)
+        life.append((key, (int(epoch), float(expiry))))
+
     for key_i, chunks in tensor_chunks.items():
         values[key_i] = TensorState.of(chunks, lamport=lamports[key_i])
-    return LatticeStore.of({keys[i]: v for i, v in values.items()})
+    return LatticeStore(tuple(sorted((keys[i], v)
+                                     for i, v in values.items())),
+                        tuple(sorted(life)))
 
 
 # ---------------------------------------------------------------------------
 # Generic payload bodies (what frames carry)
 # ---------------------------------------------------------------------------
 
-def encode_value(value: Any) -> bytes:
+def encode_value(value: Any, compress: bool = False) -> bytes:
     """Tagged payload body for any lattice value the engine ships: stores
     and bare TensorStates take the stacked columnar path; every other
-    lattice (membership views, dot stores, counters…) rides opaque."""
+    lattice (membership views, dot stores, counters…) rides opaque.
+    ``compress`` forwards to :func:`encode_store`'s per-group column
+    compression."""
     if isinstance(value, LatticeStore):
-        return bytes([_TAG_STORE]) + encode_store(value)
+        return bytes([_TAG_STORE]) + encode_store(value, compress=compress)
     if isinstance(value, TensorState):
         wrapped = LatticeStore.key_delta(_SINGLE, value)
-        return bytes([_TAG_TENSORSTATE]) + encode_store(wrapped)
+        return bytes([_TAG_TENSORSTATE]) + encode_store(wrapped,
+                                                        compress=compress)
     return bytes([_TAG_OPAQUE]) + pickle.dumps(value, protocol=4)
 
 
@@ -386,6 +486,10 @@ def encode_digest(digest) -> bytes:
         _put_str(out, key)
         out += _U8.pack(len(h))
         out += h
+    out += _U32.pack(len(digest.life))
+    for key, (epoch, expiry) in digest.life.items():
+        _put_str(out, key)
+        out += _LIFE.pack(int(epoch), float(expiry))
     return bytes(out)
 
 
@@ -405,4 +509,9 @@ def decode_digest(buf) -> StoreDigest:
         hlen = cur.unpack(_U8)
         out.opaque[key] = bytes(cur.buf[cur.off:cur.off + hlen])
         cur.off += hlen
+    n_life = cur.unpack(_U32)
+    for _ in range(n_life):
+        key = cur.get_str()
+        epoch, expiry = cur.unpack(_LIFE)
+        out.life[key] = (int(epoch), float(expiry))
     return out

@@ -37,7 +37,10 @@ import zlib
 from typing import Any, Optional, Tuple
 
 MAGIC = b"\xd4W"
-VERSION = 1
+# v2: store bodies carry a key-lifecycle table (epoch, expiry per key —
+# repro.lifecycle) and a per-group column-compression flag; digest bodies
+# carry a life section; reap/reap-ack control frames added.
+VERSION = 2
 
 _HEADER = struct.Struct("<2sBBII")
 HEADER_SIZE = _HEADER.size
@@ -52,6 +55,8 @@ FRAME_KINDS = {
     6: "digest",       # anti-entropy pull request: chunk-version summary
     7: "topk",         # top-k sparsified update payload
     8: "digest-resp",  # pull response: rows the digest's owner lacks
+    9: "reap",         # lifecycle: owner's reap proposal (control)
+    10: "reap-ack",    # lifecycle: replica-set agreement vote (control)
 }
 _KIND_BYTES = {name: byte for byte, name in FRAME_KINDS.items()}
 
@@ -135,12 +140,7 @@ def peek_kind(buf) -> Optional[str]:
 _DELTA_BASIC = struct.Struct("<BI")          # mode=0, payload len
 _DELTA_CAUSAL = struct.Struct("<BQBI")       # mode=1, counter, ghost?, len
 _ACK = struct.Struct("<Q")
-
-# what encode_store yields for a store with nothing in it — the
-# all-filtered digest-response sentinel (0 keys, 0 opaque, 0 descriptors,
-# 0 signature groups)
-_EMPTY_STORE_BODY = (struct.Struct("<I").pack(0) * 3
-                     + struct.Struct("<H").pack(0))
+_REAP = struct.Struct("<IdB")                # epoch, expiry, ok(+key utf8)
 
 
 class WireCodec:
@@ -148,50 +148,69 @@ class WireCodec:
 
     Plug an instance into ``Replica(wire=WireCodec())`` and every message
     the engine ships — delta-intervals, full-state fallbacks, acks,
-    handoffs — leaves as one :class:`FrameBytes`; ``on_receive`` feeds
-    incoming frames back through :meth:`decode_msg` to recover the engine
-    tuple, with store payloads decoded into sparse columnar form (ingest
-    is O(shipped chunks)). Stateless and shareable across replicas.
+    handoffs, lifecycle reap votes — leaves as one :class:`FrameBytes`;
+    ``on_receive`` feeds incoming frames back through :meth:`decode_msg`
+    to recover the engine tuple, with store payloads decoded into sparse
+    columnar form (ingest is O(shipped chunks)). Stateless and shareable
+    across replicas.
+
+    ``compress=True`` turns on per-group zlib compression of every store
+    payload's stacked columns (``codec.encode_store(compress=...)``) —
+    off by default because compressed columns cannot be zero-copy
+    ingested; worth it on links where bytes dominate CPU.
     """
+
+    def __init__(self, compress: bool = False):
+        self.compress = compress
 
     def encode_msg(self, msg: Tuple, *, full_state: bool = False
                    ) -> Optional[FrameBytes]:
-        from .codec import encode_digest, encode_store, encode_value
+        from .codec import (encode_digest, encode_store, encode_value,
+                            store_body_is_empty)
 
         mkind = msg[0]
         if mkind == "ack":
             return encode_frame("ack", _ACK.pack(int(msg[1])))
+        if mkind in ("reap", "reap-ack"):
+            key, epoch, expiry = msg[1], msg[2], msg[3]
+            ok = int(msg[4]) if mkind == "reap-ack" else 0
+            return encode_frame(mkind, _REAP.pack(int(epoch), float(expiry),
+                                                  ok)
+                                + key.encode("utf-8"))
         if mkind == "handoff":
-            return encode_frame("handoff", encode_value(msg[1]))
+            return encode_frame("handoff",
+                                encode_value(msg[1], self.compress))
         if mkind == "digest":
             return encode_frame("digest", encode_digest(msg[1]))
         if mkind == "digest-resp":
-            # (store, requester digest): the known-versions/known-opaque
-            # filter runs AT ENCODE TIME — the response frame is built
-            # straight from resident state and carries only the rows the
-            # requester's digest provably lacks. When nothing survives
-            # the filter there is no frame at all (None: the engine's
-            # _post drops it), so a convergent mesh trades only digests
-            # — and the emptiness check costs nothing beyond the one
-            # encode pass that had to happen anyway.
+            # (store, requester digest): the known-versions/known-opaque/
+            # known-life filter runs AT ENCODE TIME — the response frame
+            # is built straight from resident state and carries only the
+            # rows the requester's digest provably lacks. When nothing
+            # survives the filter there is no frame at all (None: the
+            # engine's _post drops it), so a convergent mesh trades only
+            # digests — and the emptiness check costs nothing beyond the
+            # one encode pass that had to happen anyway.
             _, store, digest = msg
             body = encode_store(store, known_versions=digest.tensors,
-                                known_opaque=digest.opaque)
-            if body == _EMPTY_STORE_BODY:
+                                known_opaque=digest.opaque,
+                                known_life=digest.life,
+                                compress=self.compress)
+            if store_body_is_empty(body):
                 return None
             return encode_frame("digest-resp", body)
         if mkind != "delta":  # pragma: no cover - engine ships no others
             raise FrameError(f"unframeable message kind {mkind!r}")
         if len(msg) == 2:                      # basic-mode delta-group
-            payload = encode_value(msg[1])
+            payload = encode_value(msg[1], self.compress)
             body = _DELTA_BASIC.pack(0, len(payload)) + payload
         else:                                  # causal delta-interval
             _, d, n, ghost = msg
-            payload = encode_value(d)
+            payload = encode_value(d, self.compress)
             body = (_DELTA_CAUSAL.pack(1, int(n), int(ghost is not None),
                                        len(payload)) + payload)
             if ghost is not None:
-                body += encode_value(ghost)
+                body += encode_value(ghost, self.compress)
         return encode_frame(self._payload_kind(msg[1], full_state), body)
 
     @staticmethod
@@ -210,6 +229,12 @@ class WireCodec:
         kind, payload = decode_frame(frame)
         if kind == "ack":
             return ("ack", _ACK.unpack_from(payload, 0)[0])
+        if kind in ("reap", "reap-ack"):
+            epoch, expiry, ok = _REAP.unpack_from(payload, 0)
+            key = bytes(payload[_REAP.size:]).decode("utf-8")
+            if kind == "reap":
+                return ("reap", key, int(epoch), float(expiry))
+            return ("reap-ack", key, int(epoch), float(expiry), int(ok))
         if kind == "handoff":
             return ("handoff", decode_value(payload))
         if kind == "digest":

@@ -1,0 +1,697 @@
+"""Key lifecycle subsystem: expiry lattice, acked reaper GC, read
+replicas.
+
+The load-bearing properties:
+
+* the per-key ``(epoch, expiry)`` lifecycle component keeps
+  ``LatticeStore`` a join-semilattice (lex product of a chain with the
+  value lattice): joins stay idempotent/commutative/associative, a
+  tombstone (bumped epoch, no value) ⊥-absorbs every straggler delta of
+  the reaped incarnation in either join order, and a touch only ever
+  extends the expiry;
+* digests and wire frames carry lifecycle state end to end — pull-sync
+  propagates tombstones and expiry extensions, never resurrects a reaped
+  key, and the encode-time filter still matches the ``digest_diff``
+  oracle;
+* the reaper only commits with the whole write replica set's acks (a
+  partitioned member blocks the reap until it can vote), and a straggler
+  that replays pre-reap deltas converges to the reaped state;
+* read replicas subscribe to a hot key's gossip via digest pull without
+  joining its write set, its push traffic, or its reap quorum;
+* every per-peer map — engine bookkeeping and reaper ack sets alike —
+  is pruned for departed peers through one registry.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (Compose, GCounter, GSet, LatticeStore, MVRegister,
+                        NetConfig, Simulator, StoreDigest, StoreReplica,
+                        digest_diff, make_policy, store_digest)
+from repro.core.tensor_lattice import TensorState, chunk_tensor
+from repro.lifecycle import (LIFE_BOTTOM, NO_EXPIRY, ReaperProtocol,
+                             expired, touch)
+from repro.sync import KeyOwnership, ShardByKey
+from repro.wire import (WireCodec, decode_digest, decode_store,
+                        encode_digest, encode_frame, encode_store,
+                        encode_value, store_body_is_empty)
+
+
+# ---------------------------------------------------------------------------
+# The lifecycle lattice inside LatticeStore
+# ---------------------------------------------------------------------------
+
+def _counter_store(**vals):
+    out = LatticeStore.bottom()
+    for key, n in vals.items():
+        out = out.join(LatticeStore.bottom().apply_delta(
+            key, GCounter, "inc_delta", "r", n))
+    return out
+
+
+def _sample_stores():
+    """A small mixed family: values, expiries, tombstones, revivals."""
+    v = _counter_store(a=3, b=1)
+    return [
+        LatticeStore.bottom(),
+        v,
+        v.join(LatticeStore.life_delta("a", (0, 5.0))),
+        LatticeStore.life_delta("a", (1, 7.0)),             # tombstone
+        LatticeStore.life_delta("b", (2, 1.0)),
+        _counter_store(a=9).join(LatticeStore.life_delta("a", (1, 9.0))),
+        LatticeStore.life_delta("c", (0, 3.0)),             # expiry only
+    ]
+
+
+def test_lifecycle_store_lattice_laws():
+    S = _sample_stores()
+    for x in S:
+        assert x.join(x) == x
+        for y in S:
+            assert x.join(y) == y.join(x)
+            assert x.leq(x.join(y)) and y.leq(x.join(y))
+            for z in S:
+                assert x.join(y).join(z) == x.join(y.join(z))
+
+
+def test_tombstone_absorbs_straggler_both_orders():
+    v = _counter_store(a=5)
+    tomb = LatticeStore.life_delta("a", (1, 2.0))
+    s = v.join(tomb)
+    assert s.tombstoned("a") and s.get("a", GCounter).value() == 0
+    assert s.join(v) == s and v.join(s) == s
+    # a tombstone also absorbs *fresh* epoch-0 writes (normal writes
+    # cannot resurrect; revival is an explicit epoch bump)
+    late = _counter_store(a=100)
+    assert s.join(late) == s
+
+
+def test_touch_extends_never_shrinks():
+    life = (0, 10.0)
+    assert touch(life, 5.0, 2.0) == (0, 10.0)       # 7 < 10: no shrink
+    assert touch(life, 9.0, 4.0) == (0, 13.0)
+    s = LatticeStore.life_delta("k", (0, 10.0))
+    assert s.join(LatticeStore.life_delta("k", (0, 6.0))).life_of("k") \
+        == (0, 10.0)
+
+
+def test_revival_is_a_new_incarnation_above_the_tombstone():
+    tomb = LatticeStore.life_delta("a", (1, 2.0))
+    # with_life STAMPS the delta's epoch (a join would treat the value
+    # as epoch-0 and absorb it — which is exactly the straggler rule)
+    revived = _counter_store(a=7).with_life("a", (2, 30.0))
+    s = tomb.join(revived)
+    assert not s.tombstoned("a")
+    assert s.get("a", GCounter).value() == 7
+    # a late reap commit against epoch 1 (tombstone to epoch 2 carries
+    # no value) cannot kill the revival — equal epochs join values
+    late_commit = LatticeStore.life_delta("a", (2, 2.0))
+    assert s.join(late_commit).get("a", GCounter).value() == 7
+
+
+def test_lifecycle_leq_eq_and_decompose():
+    v = _counter_store(a=3)
+    t = v.join(LatticeStore.life_delta("a", (1, 4.0)))
+    assert v.leq(t) and not t.leq(v)
+    assert LatticeStore.bottom().leq(t)
+    assert t != LatticeStore.bottom() and t != v
+    big = t.join(_counter_store(b=2)).join(
+        LatticeStore.life_delta("b", (0, 9.0)))
+    atoms = big.decompose()
+    rejoined = LatticeStore.bottom()
+    for a in atoms:
+        assert a.leq(big)
+        rejoined = rejoined.join(a)
+    assert rejoined == big
+
+
+def test_restrict_and_all_keys_carry_tombstones():
+    s = _counter_store(a=1).join(LatticeStore.life_delta("t", (1, 0.0)))
+    assert s.all_keys() == {"a", "t"}
+    assert s.keys() == {"a"}
+    kept = s.restrict(["t"])
+    assert kept.tombstoned("t") and kept.all_keys() == {"t"}
+    assert s.restrict(["a"]).life == ()
+
+
+def test_expired_predicate():
+    assert not expired(LIFE_BOTTOM, 1e9)            # no TTL ⇒ immortal
+    assert expired((0, 5.0), 5.0) and not expired((0, 5.0), 4.9)
+
+
+def test_tensor_stores_with_matching_epochs_still_batch_join():
+    rng = np.random.default_rng(0)
+    mk = lambda seed: LatticeStore.of(
+        {f"k{i}": TensorState.of({"w": chunk_tensor(
+            np.random.default_rng(seed + i).normal(size=(32,))
+            .astype(np.float32), 8, version=seed + 1)})
+         for i in range(4)},
+        life={f"k{i}": (0, 50.0) for i in range(4)})
+    a, b = mk(1), mk(5)
+    joined = a.join(b)
+    oracle = a.join(b, batched=False)
+    assert joined == oracle
+    assert joined.life_of("k0") == (0, 50.0)
+
+
+# ---------------------------------------------------------------------------
+# Digest + wire carry lifecycle state
+# ---------------------------------------------------------------------------
+
+def test_store_digest_and_frames_carry_life():
+    s = _counter_store(a=2).join(
+        LatticeStore.life_delta("a", (0, 9.0))).join(
+        LatticeStore.life_delta("t", (3, 1.0)))
+    dg = store_digest(s)
+    assert dg.life == {"a": (0, 9.0), "t": (3, 1.0)}
+    assert decode_digest(encode_digest(dg)) == dg
+    rt = decode_store(encode_store(s))
+    assert rt == s and rt.tombstoned("t")
+
+
+def test_digest_diff_epoch_rules():
+    fresh = _counter_store(a=4)
+    # requester tombstoned past the responder: nothing ships
+    req = StoreDigest(life={"a": (1, 2.0)})
+    d = digest_diff(fresh, req)
+    assert d == LatticeStore.bottom()
+    # requester behind an epoch: the key ships wholesale, with its life
+    revived = fresh.with_life("a", (1, 8.0))
+    d2 = digest_diff(revived, StoreDigest(life={"a": (0, 5.0)}))
+    assert d2.get("a", GCounter).value() == 4
+    assert d2.life_of("a") == (1, 8.0)
+    # same epoch, only a fresher expiry: just the life entry ships
+    d3 = digest_diff(fresh.join(LatticeStore.life_delta("a", (0, 9.0))),
+                     store_digest(fresh))
+    assert d3.keys() == frozenset() and d3.life_of("a") == (0, 9.0)
+
+
+def test_shipped_values_carry_epoch_stamp_even_when_life_dominated():
+    """Regression (found by the random-schedule property): requester
+    holds a tombstone (3, 5.0) for 'b'; responder holds a *value* at
+    epoch 3 whose life (3, -inf) is lex-dominated, so the life entry
+    itself is filtered from the diff — but the value must still ship
+    with an epoch stamp, or it joins at epoch 0 and the requester's own
+    tombstone absorbs the very rows it asked for."""
+    requester = LatticeStore.life_delta("b", (3, 5.0))
+    responder = _counter_store(b=6).with_life("b", (3, NO_EXPIRY))
+    dg = store_digest(requester)
+    d = digest_diff(responder, dg)
+    assert d.life_of("b")[0] == 3
+    assert requester.join(d) == requester.join(responder)
+    assert requester.join(d).get("b", GCounter).value() == 6
+    wire_d = decode_store(encode_store(
+        responder, known_versions=dg.tensors, known_opaque=dg.opaque,
+        known_life=dg.life))
+    assert requester.join(wire_d) == requester.join(responder)
+
+
+def test_digest_diff_join_equivalence_with_lifecycle():
+    """requester ⊔ diff == requester ⊔ responder, across epoch skews."""
+    base = _counter_store(a=3, b=2)
+    variants = [
+        base,
+        base.join(LatticeStore.life_delta("a", (0, 5.0))),
+        base.join(LatticeStore.life_delta("a", (1, 5.0))),
+        base.join(LatticeStore.life_delta("b", (2, 1.0))).join(
+            _counter_store(c=1)),
+        LatticeStore.life_delta("a", (4, 0.0)),
+    ]
+    for requester in variants:
+        for responder in variants:
+            d = digest_diff(responder, store_digest(requester))
+            assert requester.join(d) == requester.join(responder), \
+                (requester, responder, d)
+
+
+def test_wire_digest_response_filter_matches_oracle_with_life():
+    stores = [
+        _counter_store(a=3).join(LatticeStore.life_delta("a", (1, 2.0))),
+        _counter_store(a=1, b=5).join(
+            LatticeStore.life_delta("b", (0, 7.0))),
+        LatticeStore.life_delta("a", (2, 0.0)),
+    ]
+    for requester in stores:
+        for responder in stores:
+            dg = store_digest(requester)
+            body = encode_store(responder, known_versions=dg.tensors,
+                                known_opaque=dg.opaque, known_life=dg.life)
+            decoded = decode_store(body)
+            assert requester.join(decoded) == requester.join(responder)
+            if store_body_is_empty(body):
+                assert digest_diff(responder, dg) == LatticeStore.bottom()
+
+
+def test_life_only_response_is_not_dropped_as_empty():
+    responder = LatticeStore.life_delta("k", (1, 3.0))
+    requester_digest = store_digest(_counter_store(k=2))
+    wire = WireCodec()
+    frame = wire.encode_msg(("digest-resp", responder, requester_digest))
+    assert frame is not None
+    kind, *rest = wire.decode_msg(frame)
+    assert kind == "digest-resp" and rest[0].tombstoned("k")
+    # and a fully-covered response still yields no frame at all
+    same = _counter_store(k=2)
+    assert wire.encode_msg(("digest-resp", same,
+                            store_digest(same))) is None
+
+
+def test_unaligned_columns_do_not_swallow_life_table():
+    """Regression (review finding): the plain-path decoder never skipped
+    the trailing 8-byte column pad, so with a values column whose byte
+    length is not a multiple of 8 (here: chunk width 1 float32, 3 rows
+    = 12B) the life-table count was read from pad zeros and every
+    tombstone/expiry silently vanished in transit — and in multi-group
+    payloads the next group header desynced the same way."""
+    s = LatticeStore.of(
+        {"k": TensorState.of({"a": chunk_tensor(
+            np.arange(3, dtype=np.float32), 1, version=1)}),
+         # second signature group (different chunk width), also unaligned
+         "m": TensorState.of({"b": chunk_tensor(
+            np.arange(9, dtype=np.float32), 3, version=2)})},
+        life={"gone": (1, 50.0), "k": (0, 9.0)})
+    rt = decode_store(encode_store(s))
+    assert rt == s
+    assert rt.tombstoned("gone") and rt.life_of("k") == (0, 9.0)
+
+
+def test_reap_frames_roundtrip():
+    wire = WireCodec()
+    for msg in [("reap", "sess/0", 2, 17.5),
+                ("reap-ack", "sess/0", 2, 17.5, 1),
+                ("reap-ack", "κλειδί", 0, float("-inf"), 0)]:
+        frame = wire.encode_msg(msg)
+        assert frame.kind == msg[0]
+        assert wire.decode_msg(frame) == msg
+
+
+# ---------------------------------------------------------------------------
+# Per-group column compression (WireCodec(compress=True))
+# ---------------------------------------------------------------------------
+
+def _compressible_store(n_keys=8, n_chunks=8, chunk=64):
+    rng = np.random.default_rng(0)
+    return LatticeStore.of({
+        f"k{i}": TensorState.of({"w": chunk_tensor(
+            rng.integers(0, 4, size=(n_chunks * chunk,))
+            .astype(np.float32), chunk, version=1)})
+        for i in range(n_keys)})
+
+
+def test_compressed_store_roundtrip_identity():
+    s = _compressible_store().join(LatticeStore.life_delta("k0", (0, 5.0)))
+    plain = encode_store(s)
+    packed = encode_store(s, compress=True)
+    assert decode_store(packed) == decode_store(plain) == s
+
+
+def test_compressed_frame_smaller_and_crc_protected():
+    from repro.wire import FrameError, decode_frame
+    s = _compressible_store()
+    plain = encode_frame("state", encode_value(s))
+    packed = encode_frame("state", encode_value(s, True))
+    assert len(packed) < len(plain)
+    flipped = bytearray(packed)
+    flipped[len(flipped) // 2] ^= 0x40       # corrupt the deflate stream
+    with pytest.raises(FrameError, match="checksum"):
+        decode_frame(bytes(flipped))
+
+
+def test_wirecodec_compress_flag_is_end_to_end():
+    s = _compressible_store()
+    frame = WireCodec(compress=True).encode_msg(("handoff", s))
+    assert WireCodec().decode_msg(frame)[1] == s     # self-describing
+
+
+# ---------------------------------------------------------------------------
+# The reaper protocol
+# ---------------------------------------------------------------------------
+
+def _mesh(wire=None, replication=2, ttl=5.0, loss=0.1, seed=3,
+          read_replication=None, n=3):
+    ids = [f"gw{k}" for k in range(n)]
+    ownership = KeyOwnership(ids, replication=replication,
+                             read_replication=read_replication)
+    sim = Simulator(NetConfig(loss=loss, seed=seed))
+    nodes = [sim.add_node(StoreReplica(
+        i, [j for j in ids if j != i], causal=True,
+        policy=Compose(make_policy("bp+rr+digest-sync:4"),
+                       ShardByKey(ownership)),
+        rng=random.Random(seed + k), ownership=ownership, wire=wire,
+        ttl=ttl)) for k, i in enumerate(ids)]
+    reapers = [ReaperProtocol(node, ownership, grace=1.0, retry=2.0)
+               for node in nodes]
+    for node in nodes:
+        sim.every(1.0, node.on_periodic)
+        sim.every(7.0, node.gc_deltas)
+    return sim, nodes, reapers, ownership
+
+
+@pytest.mark.parametrize("wire", [None, WireCodec(), WireCodec(True)],
+                         ids=["object", "wire", "wire-z"])
+def test_reaper_drops_expired_keys_with_full_quorum(wire):
+    sim, nodes, reapers, ownership = _mesh(wire=wire)
+    by_id = {n.id: n for n in nodes}
+    keys = [f"sess{i}" for i in range(8)]
+    for i, key in enumerate(keys):
+        nodes[i % 3].update(key, MVRegister, "write_delta",
+                            nodes[i % 3].id, "done")
+    sim.run_for(3.0)
+    # keep sess0 alive with touches while everything else expires
+    for t in range(25):
+        nodes[0].update("sess0", MVRegister, "write_delta", "gw0", f"w{t}")
+        sim.run_for(1.0)
+    for key in keys[1:]:
+        for w in ownership.owners(key):
+            st = by_id[w].X
+            assert st.tombstoned(key), (key, w, st.life_of(key))
+    for w in ownership.owners("sess0"):
+        st = by_id[w].X
+        assert not st.tombstoned("sess0")
+        assert st.get("sess0", MVRegister).read()  # value intact
+    assert sum(r.reaped for r in reapers) >= len(keys) - 1
+
+
+def test_partitioned_member_blocks_reap_until_heal():
+    sim, nodes, reapers, ownership = _mesh(loss=0.0, seed=11)
+    by_id = {n.id: n for n in nodes}
+    nodes[0].update("cold", MVRegister, "write_delta", "gw0", "x")
+    sim.run_for(3.0)
+    owners = ownership.owners("cold")
+    blocked = owners[1]
+    sim.add_partition(sim.time, sim.time + 20.0, [blocked],
+                      [i for i in by_id if i != blocked])
+    sim.run_for(18.0)            # expiry long past; quorum cannot form
+    assert not by_id[owners[0]].X.tombstoned("cold")
+    sim.run_for(30.0)            # heal → acks → commit → gossip
+    for w in owners:
+        assert by_id[w].X.tombstoned("cold")
+
+
+@pytest.mark.parametrize("wire", [None, WireCodec()],
+                         ids=["object", "wire"])
+def test_straggler_replay_never_resurrects(wire):
+    sim, nodes, reapers, ownership = _mesh(wire=wire, loss=0.0, seed=17)
+    by_id = {n.id: n for n in nodes}
+    owners = ownership.owners("ghost")
+    straggler = [i for i in by_id if i not in owners][0]
+    ingress = by_id[straggler]
+    ingress.update("ghost", MVRegister, "write_delta", straggler, "alive")
+    sim.run_for(3.0)             # delta reaches the owners
+    pre_reap = ingress.X.restrict(["ghost"])
+    assert pre_reap.keys() == {"ghost"}
+    sim.run_for(30.0)            # expiry passes, owners reap
+    primary = by_id[owners[0]]
+    assert primary.X.tombstoned("ghost")
+    # replay the pre-reap delta straight into every owner (dup/loss model:
+    # an arbitrarily late retransmission)
+    for w in owners:
+        node = by_id[w]
+        node.on_receive(straggler, wire.encode_msg(("handoff", pre_reap))
+                        if wire else ("handoff", pre_reap))
+        assert node.X.tombstoned("ghost"), "straggler replay resurrected"
+        assert node.X.get("ghost", MVRegister).read() == frozenset()
+
+
+def test_touched_key_cancels_inflight_proposal():
+    sim, nodes, reapers, ownership = _mesh(loss=0.0, seed=23, ttl=4.0)
+    by_id = {n.id: n for n in nodes}
+    owners = ownership.owners("busy")
+    primary = by_id[owners[0]]
+    primary.update("busy", MVRegister, "write_delta", primary.id, "v0")
+    sim.run_for(5.5)             # expiry passing; proposals start
+    primary.update("busy", MVRegister, "write_delta", primary.id, "v1")
+    sim.run_for(2.0)
+    assert not primary.X.tombstoned("busy")     # touch cancelled the reap
+    sim.run_for(30.0)
+    assert primary.X.tombstoned("busy")         # …until it expired again
+
+
+def test_crash_resets_proposals_but_reap_still_happens():
+    sim, nodes, reapers, ownership = _mesh(loss=0.0, seed=29)
+    by_id = {n.id: n for n in nodes}
+    owners = ownership.owners("crashkey")
+    primary = by_id[owners[0]]
+    primary.update("crashkey", MVRegister, "write_delta", primary.id, "x")
+    sim.run_for(7.0)             # expiry near/past, proposal in flight
+    sim.crash(primary.id, 3.0)
+    assert primary.reaper.pending_keys() in ({"crashkey"}, frozenset())
+    sim.run_for(5.0)
+    assert primary.reaper.pending_keys() == frozenset() or primary.alive
+    sim.run_for(30.0)
+    for w in owners:
+        assert by_id[w].X.tombstoned("crashkey")
+
+
+def test_departed_peer_leaves_quorum_and_registry():
+    """The single per-peer registry: a departed worker's reaper acks,
+    engine watermarks and ack maps all clear in prune_departed — and the
+    quorum re-derives, so the reap completes without the dead peer."""
+    ids = ["gw0", "gw1", "gw2"]
+    live = set(ids)
+    ownership = KeyOwnership(lambda: sorted(live), replication=3)
+    sim = Simulator(NetConfig(loss=0.0, seed=31))
+    nodes = [sim.add_node(StoreReplica(
+        i, [j for j in ids if j != i], causal=True,
+        policy=make_policy("bp+rr"), rng=random.Random(31 + k),
+        ownership=ownership, ttl=4.0)) for k, i in enumerate(ids)]
+    reapers = {n.id: ReaperProtocol(n, ownership, grace=0.5, retry=1.0)
+               for n in nodes}
+    for n in nodes:
+        sim.every(1.0, n.on_periodic)
+    by_id = {n.id: n for n in nodes}
+    primary_id = ownership.owner("doomed")
+    primary = by_id[primary_id]
+    dead = [i for i in ids if i != primary_id][0]
+    sim.nodes[dead].alive = False            # silent forever
+    primary.update("doomed", MVRegister, "write_delta", primary_id, "x")
+    sim.run_for(10.0)                        # proposal stuck on dead peer
+    assert not primary.X.tombstoned("doomed")
+    prop_acks = reapers[primary_id]._pending["doomed"].acks
+    # fill per-peer state for the dead peer, then depart it
+    primary._basic_sent[dead] = 7
+    live.discard(dead)
+    primary.neighbors = [j for j in primary.neighbors if j != dead]
+    primary.prune_departed()
+    assert dead not in primary.A and dead not in primary._known
+    assert dead not in primary._basic_sent
+    assert all(key[0] != dead for key in primary._inflight)
+    assert dead not in prop_acks
+    sim.run_for(10.0)                        # quorum re-derived: commits
+    assert primary.X.tombstoned("doomed")
+
+
+def test_foreign_ingress_copies_are_evicted():
+    sim, nodes, reapers, ownership = _mesh(loss=0.0, seed=37)
+    by_id = {n.id: n for n in nodes}
+    owners = ownership.owners("fkey")
+    foreign = [i for i in by_id if i not in owners][0]
+    by_id[foreign].update("fkey", MVRegister, "write_delta", foreign, "x")
+    sim.run_for(3.0)
+    assert by_id[foreign].X.get("fkey") is not None
+    sim.run_for(30.0)
+    assert by_id[foreign].X.get("fkey") is None
+    assert "fkey" not in by_id[foreign].X.all_keys()     # fully shed
+    assert by_id[foreign].reaper.evicted >= 1
+    for w in owners:
+        assert by_id[w].X.tombstoned("fkey")             # quorum reaped
+
+
+# ---------------------------------------------------------------------------
+# Read replicas
+# ---------------------------------------------------------------------------
+
+def test_commit_and_foreign_eviction_in_one_step_keep_the_tombstone():
+    """Regression (review finding): step() used to restrict its loop-entry
+    store snapshot back into X after evicting foreign copies, silently
+    discarding a tombstone committed earlier in the same step."""
+    ids = ["n0", "n1"]
+    ownership = KeyOwnership(ids, replication=1)
+    sim = Simulator(NetConfig(loss=0.0, seed=1))
+    node = sim.add_node(StoreReplica("n0", ["n1"], causal=True,
+                                     ownership=ownership, ttl=2.0))
+    sim.add_node(StoreReplica("n1", ["n0"], causal=True,
+                              ownership=ownership, ttl=2.0))
+    reaper = ReaperProtocol(node, ownership, grace=0.0, retry=1.0)
+    mine = next(k for k in (f"k{i}" for i in range(99))
+                if ownership.owner(k) == "n0")
+    foreign = next(k for k in (f"k{i}" for i in range(99))
+                   if ownership.owner(k) == "n1")
+    node.update(mine, MVRegister, "write_delta", "n0", "x")
+    node.update(foreign, MVRegister, "write_delta", "n0", "y")
+    sim.run_for(5.0)                 # both past expiry
+    reaper.step()                    # replication=1: commit is immediate
+    assert node.X.tombstoned(mine), "commit lost to the eviction snapshot"
+    assert foreign not in node.X.all_keys()
+    assert reaper.reaped == 1 and reaper.evicted == 1
+
+
+def test_nacked_proposal_keeps_retry_throttle():
+    """Regression (review finding): a nack used to pop the proposal, and
+    the next step rebuilt it with a fresh retransmit clock — reap frames
+    then went out every round instead of every `retry` seconds."""
+    ids = ["n0", "n1"]
+    ownership = KeyOwnership(ids, replication=2)
+    sim = Simulator(NetConfig(loss=0.0, seed=1, min_delay=0.01,
+                              max_delay=0.05))
+    a = sim.add_node(StoreReplica("n0", ["n1"], causal=True,
+                                  ownership=ownership, ttl=1.0))
+    b = sim.add_node(StoreReplica("n1", ["n0"], causal=True,
+                                  ownership=ownership, ttl=1.0))
+    primary = a if ownership.owner("k") == "n0" else b
+    other = b if primary is a else a
+    reaper = ReaperProtocol(primary, ownership, grace=0.0, retry=10.0)
+    primary.update("k", MVRegister, "write_delta", primary.id, "x")
+    sim.run_for(2.0)                 # expired at the proposer…
+    # …but the member holds a fresher expiry, so it keeps nacking
+    other.X = other.X.join(LatticeStore.life_delta("k", (0, 1e9)))
+    for _ in range(6):
+        reaper.step()
+        sim.run_for(0.2)
+    sent = sim.stats.by_kind.get("reap", 0)
+    assert sent <= 2, f"{sent} reap frames in 6 steps under retry=10"
+    assert not primary.X.tombstoned("k")
+    own = KeyOwnership(["a", "b", "c", "d"], replication=2,
+                       read_replication=3)
+    owners = own.owners("k")
+    readers = own.readers("k")
+    assert len(owners) == 2 and len(readers) == 3
+    assert set(owners) < set(readers)
+    outside = (set("abcd") - set(readers)).pop()
+    assert not own.reads(outside, "k")
+    own.subscribe(outside, "k")
+    assert own.reads(outside, "k") and outside not in own.owners("k")
+    own.unsubscribe(outside, "k")
+    assert not own.reads(outside, "k")
+    with pytest.raises(ValueError):
+        KeyOwnership(["a"], replication=2, read_replication=1)
+
+
+def test_read_replica_converges_via_pull_without_write_set():
+    """A subscriber pulls a hot key's rows through digest-sync, serves
+    them locally, never buffers/forwards the key, never joins the reap
+    quorum — and the tombstone still reaches it through pull."""
+    sim, nodes, reapers, ownership = _mesh(loss=0.0, seed=41, n=4,
+                                           wire=WireCodec())
+    by_id = {n.id: n for n in nodes}
+    owners = ownership.owners("hot")
+    reader_id = [i for i in by_id if i not in owners][0]
+    reader = by_id[reader_id]
+    ownership.subscribe(reader_id, "hot")
+    writer = by_id[owners[0]]
+    for t in range(8):
+        writer.update("hot", MVRegister, "write_delta", writer.id, f"v{t}")
+        sim.run_for(1.0)
+    sim.run_for(8.0)                 # a pull round lands (every:4 cadence)
+    assert reader.X.get("hot", MVRegister).read() == frozenset({"v7"})
+    # the reader never buffers the hot key (it is not in the write set),
+    # so its push rounds cannot forward it
+    assert all("hot" not in e.delta.all_keys()
+               for e in reader.entries.values()
+               if isinstance(e.delta, LatticeStore))
+    # reap quorum = the write set only; the reader holding the value
+    # must not block the reap
+    sim.run_for(40.0)
+    for w in owners:
+        assert by_id[w].X.tombstoned("hot")
+    sim.run_for(20.0)                # tombstone reaches the reader by pull
+    assert reader.X.tombstoned("hot") or reader.X.get("hot") is None
+
+
+# ---------------------------------------------------------------------------
+# Randomized write/expire/reap schedules (the property-test driver; the
+# hypothesis wrapper lives in test_lifecycle_properties.py — this module
+# pre-validates the body over fixed seeds so the property holds even
+# where hypothesis is not installed)
+# ---------------------------------------------------------------------------
+
+def run_lifecycle_schedule(seed: int, wire: bool = False) -> None:
+    """Random stores, write/expire/reap schedules, and straggler delta
+    replays under loss/dup/partition/crash: a reaped key is never
+    resurrected and live keys are untouched."""
+    rng = random.Random(seed)
+    ids = ["n0", "n1", "n2"]
+    ownership = KeyOwnership(ids, replication=2)
+    codec = WireCodec() if wire else None
+    sim = Simulator(NetConfig(loss=rng.choice([0.0, 0.15, 0.3]), dup=0.1,
+                              seed=seed))
+    nodes = [sim.add_node(StoreReplica(
+        i, [j for j in ids if j != i], causal=True,
+        policy=Compose(make_policy("bp+rr+digest-sync:4"),
+                       ShardByKey(ownership)),
+        rng=random.Random(seed + k), ownership=ownership, wire=codec,
+        ttl=6.0)) for k, i in enumerate(ids)]
+    for node in nodes:
+        ReaperProtocol(node, ownership, grace=1.0, retry=1.5)
+        sim.every(1.0, node.on_periodic)
+        sim.every(5.0, node.gc_deltas)
+    by_id = {n.id: n for n in nodes}
+    keys = [f"k{i}" for i in range(5)]
+    keep_alive = set(rng.sample(keys, 2))
+    captured = []        # pre-reap single-key deltas for straggler replay
+
+    def replay():
+        if not captured:
+            return
+        d = rng.choice(captured)
+        dst = rng.choice(nodes)
+        msg = ("handoff", d)
+        dst.on_receive(rng.choice(ids),
+                       codec.encode_msg(msg) if codec else msg)
+
+    for t in range(35):
+        node = rng.choice([n for n in nodes if n.alive])
+        key = rng.choice(keys)
+        node.update(key, GCounter, "inc_delta", node.id, 1)
+        captured.append(node.X.restrict([key]))
+        for ka in keep_alive:
+            toucher = rng.choice([n for n in nodes if n.alive])
+            toucher.update(ka, GCounter, "inc_delta", toucher.id, 1)
+        if rng.random() < 0.10:
+            cut = rng.choice(ids)
+            sim.add_partition(sim.time, sim.time + rng.uniform(2.0, 5.0),
+                              [cut], [i for i in ids if i != cut])
+        if rng.random() < 0.08:
+            sim.crash(rng.choice(ids), rng.uniform(1.0, 3.0))
+        if rng.random() < 0.25:
+            replay()
+        sim.run_for(rng.uniform(0.5, 1.5))
+        # live keys untouched: nothing that is still being written may
+        # ever be tombstoned, anywhere
+        for ka in keep_alive:
+            for n in nodes:
+                assert not n.X.tombstoned(ka), (seed, t, ka, n.id)
+
+    sim.run_for(60.0)        # everything expires; partitions healed; reap
+    for key in keys:
+        for w in ownership.owners(key):
+            st = by_id[w].X
+            assert st.tombstoned(key), (seed, key, w, st.life_of(key))
+        replay()
+    sim.run_for(20.0)        # straggler replays after the reaps…
+    for key in keys:
+        for w in ownership.owners(key):
+            st = by_id[w].X
+            assert st.tombstoned(key), (seed, key, w, "resurrected")
+            assert st.get(key, GCounter).value() == 0
+
+
+@pytest.mark.parametrize("seed,wire", [(0, False), (1, True), (2, False),
+                                       (3, True)])
+def test_lifecycle_schedule_seed_sweep(seed, wire):
+    run_lifecycle_schedule(seed, wire)
+
+
+def test_ttl_write_stamps_and_revives():
+    node = StoreReplica("n0", [], ttl=10.0)
+    sim = Simulator(NetConfig(seed=1))
+    sim.add_node(node)
+    node.update("k", GCounter, "inc_delta", "n0", 1)
+    assert node.X.life_of("k") == (0, 10.0)
+    node.X = node.X.join(LatticeStore.life_delta("k", (1, 10.0)))
+    assert node.X.tombstoned("k")
+    node.update("k", GCounter, "inc_delta", "n0", 5)
+    assert node.X.life_of("k")[0] == 2           # new incarnation
+    assert node.X.get("k", GCounter).value() == 5

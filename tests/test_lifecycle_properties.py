@@ -1,0 +1,86 @@
+"""Property tests (hypothesis) for the key lifecycle subsystem:
+
+* **no resurrection, live keys untouched** — for random stores, random
+  write/expire/reap schedules, and straggler delta replays under
+  loss/duplication/partition/crash, a reaped key is never resurrected
+  (at any write-set member, in object or wire mode) and keys still being
+  written are never tombstoned (the schedule driver asserts both; it
+  lives in ``test_lifecycle.py`` so fixed-seed sweeps validate the body
+  where hypothesis is not installed);
+* the lifecycle store lattice laws hold on randomly generated stores
+  (random values × random (epoch, expiry) components): join stays
+  idempotent/commutative/associative, restriction and decomposition stay
+  faithful;
+* digest exchange stays join-equivalent to full state across random
+  epoch/expiry skews (the Def. 6 argument with lifecycle in play).
+"""
+
+import random
+
+import pytest
+import pytest as _pytest
+_pytest.importorskip(
+    "hypothesis", reason="dev dependency — pip install -r requirements-dev.txt")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GCounter, LatticeStore, digest_diff, store_digest
+from test_lifecycle import run_lifecycle_schedule
+
+KEYS = ("a", "b", "c")
+
+
+@st.composite
+def lifecycle_stores(draw):
+    out = LatticeStore.bottom()
+    for key in KEYS:
+        if draw(st.booleans()):
+            out = out.join(LatticeStore.bottom().apply_delta(
+                key, GCounter, "inc_delta", draw(st.sampled_from("xyz")),
+                draw(st.integers(1, 9))))
+        epoch = draw(st.integers(0, 3))
+        expiry = draw(st.sampled_from([float("-inf"), 0.0, 5.0, 50.0]))
+        life = (epoch, expiry)
+        if life != (0, float("-inf")):
+            if epoch and draw(st.booleans()):
+                out = out.with_life(key, life)    # value in this epoch
+            else:
+                out = out.join(LatticeStore.life_delta(key, life))
+    return out
+
+
+@settings(max_examples=60, deadline=None)
+@given(x=lifecycle_stores(), y=lifecycle_stores(), z=lifecycle_stores())
+def test_lifecycle_store_lattice_laws_random(x, y, z):
+    assert x.join(x) == x
+    assert x.join(y) == y.join(x)
+    assert x.join(y).join(z) == x.join(y.join(z))
+    assert x.leq(x.join(y)) and y.leq(x.join(y))
+
+
+@settings(max_examples=60, deadline=None)
+@given(x=lifecycle_stores())
+def test_lifecycle_decompose_faithful_random(x):
+    rejoined = LatticeStore.bottom()
+    for atom in x.decompose():
+        assert atom.leq(x)
+        rejoined = rejoined.join(atom)
+    assert rejoined == x
+
+
+@settings(max_examples=60, deadline=None)
+@given(requester=lifecycle_stores(), responder=lifecycle_stores())
+def test_digest_exchange_join_equivalent_with_lifecycle(requester,
+                                                        responder):
+    d = digest_diff(responder, store_digest(requester))
+    assert requester.join(d) == requester.join(responder)
+    # and the diff never resurrects: a requester-side tombstone stays
+    for key in KEYS:
+        if requester.tombstoned(key) \
+                and responder.life_of(key)[0] < requester.life_of(key)[0]:
+            assert requester.join(d).tombstoned(key)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), wire=st.booleans())
+def test_reaped_keys_never_resurrect_random_schedules(seed, wire):
+    run_lifecycle_schedule(seed, wire)
