@@ -319,9 +319,57 @@ def compression_rows() -> List[Tuple[str, float, str]]:
     ]
 
 
+def device_decode_rows() -> List[Tuple[str, float, str]]:
+    """Decode-to-device ingest (``WireCodec(to_device=True)`` →
+    ``kernels.resident``): a sparse delta frame decodes with its stacked
+    columns uploaded once, and a device-resident receiver ingests it in
+    exactly ONE kernel launch with no further value/version staging —
+    the whole round's host→device traffic is ~the frame's column bytes,
+    independent of the resident store's size."""
+    from repro.core import LatticeStore
+    from repro.core.tensor_lattice import TensorState, sparse_chunks
+    from repro.kernels import ops, resident
+    from repro.wire import decode_frame, encode_frame
+    from repro.wire.codec import decode_store, encode_store
+
+    n_keys, n_chunks, chunk, touched = 512, 8, 128, 16
+    store = _tensor_store(n_keys, n_chunks, chunk, seed=6)
+    rng = np.random.default_rng(7)
+    delta = LatticeStore.of({
+        f"obj{i:04d}": TensorState.of({"w": sparse_chunks(
+            n_chunks, np.array([int(rng.integers(0, n_chunks))], np.int32),
+            rng.normal(size=(1, chunk)).astype(np.float32),
+            np.full((1,), 9, np.int32))})
+        for i in range(touched)})
+    frame = encode_frame("delta", encode_store(delta))
+
+    assert resident.ensure(store) is not None
+    # warm the dispatch caches (first scatter pays the jit trace)
+    warm = decode_store(decode_frame(frame)[1], to_device=True)
+    store.join(warm)
+
+    snap = ops.counters.snapshot()
+    t0 = time.perf_counter()
+    ddev = decode_store(decode_frame(frame)[1], to_device=True)
+    out = store.join(ddev)
+    dt = time.perf_counter() - t0
+    cost = ops.counters.since(snap)
+    assert resident.resident_of(out) is not None
+    assert cost["launches"] == 1, cost
+    # staging = the decoded columns (≤ the frame) + the small padded
+    # index column; the resident store's ~2 MB of columns never move
+    assert cost["h2d_bytes"] <= len(frame) + 4 * 2 * touched, cost
+    return [
+        ("wire_device_decode_ingest", dt * 1e6,
+         f"frame_bytes={len(frame)};h2d_bytes={cost['h2d_bytes']};"
+         f"launches={cost['launches']}"),
+    ]
+
+
 def run() -> List[Tuple[str, float, str]]:
     return (frame_ratio_rows() + sim_round_rows() + handoff_rows()
-            + digest_sync_rows() + compression_rows())
+            + digest_sync_rows() + compression_rows()
+            + device_decode_rows())
 
 
 if __name__ == "__main__":

@@ -25,7 +25,8 @@ Prints ``name,us_per_call,derived`` CSV:
 
 ``--json [out.json]`` additionally writes a machine-readable artifact
 (name → {us_per_call, derived}, stamped with the git revision and
-per-suite wall times) so the perf trajectory is recorded per-commit; a
+per-suite wall times and kernel-launch counts) so the perf trajectory is
+recorded per-commit; a
 bare ``--json`` writes ``BENCH_tier1.json`` in the current directory,
 which is the repo root in CI (the workflow uploads it). ``--only a,b``
 restricts to a subset of suites.
@@ -90,13 +91,21 @@ def main(argv=None) -> None:
                              f"have {[n for n, _ in modules]}")
         modules = [(n, m) for n, m in modules if n in keep]
 
+    try:        # kernel-launch accounting rides along when jax is present
+        from repro.kernels.ops import counters as _kernel_counters
+    except Exception:  # pragma: no cover - partial installs
+        _kernel_counters = None
+
     print("name,us_per_call,derived")
     results = {}
     suite_wall = {}
+    suite_launches = {}
     failures = 0
     run_t0 = time.perf_counter()
     for name, mod in modules:
         t0 = time.perf_counter()
+        snap = (_kernel_counters.snapshot() if _kernel_counters is not None
+                else None)
         try:
             rows = mod.run()
         except Exception as e:  # report, keep going
@@ -113,12 +122,15 @@ def main(argv=None) -> None:
             }
         dt = time.perf_counter() - t0
         suite_wall[name] = round(dt, 3)
+        if snap is not None:
+            suite_launches[name] = _kernel_counters.since(snap)["launches"]
         print(f"# {name} done in {dt:.1f}s", file=sys.stderr)
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"git_revision": _git_revision(),
                        "wall_time_s": round(time.perf_counter() - run_t0, 3),
                        "suite_wall_s": suite_wall,
+                       "suite_launch_count": suite_launches,
                        "suites": [n for n, _ in modules],
                        "failures": failures,
                        "results": results}, f, indent=1, allow_nan=False)

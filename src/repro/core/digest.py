@@ -135,11 +135,27 @@ def store_digest(store: LatticeStore) -> StoreDigest:
     any other state)."""
     ts_cls = _tensorstate_cls()
     out = StoreDigest()
+    # A stacked/resident cache already holds every covered tensor's dense
+    # version column contiguously (and the resident cache mirrors it on
+    # host — vers_host — precisely so digests never touch the device);
+    # serve those as zero-copy slices and densify only uncovered tensors.
+    spans, vers_col = None, None
+    cache = store.__dict__.get("_resident_cache")
+    if cache is not None:
+        spans, vers_col = cache.spans, cache.vers_host
+    else:
+        sc = store.__dict__.get("_stacked_cache")
+        if sc is not None and sc is not False:   # False = "not stackable"
+            spans, vers_col = sc.spans, sc.vers
     for key, val in store.entries:
         if ts_cls is not None and isinstance(val, ts_cls):
             from .tensor_lattice import dense_versions
             for name, ct in val.chunks:
-                out.tensors[(key, name)] = dense_versions(ct)
+                span = spans.get((key, name)) if spans is not None else None
+                if span is not None:
+                    out.tensors[(key, name)] = vers_col[span[0]:span[1]]
+                else:
+                    out.tensors[(key, name)] = dense_versions(ct)
         else:
             out.opaque[key] = opaque_hash(val)
     out.life.update(store.life)

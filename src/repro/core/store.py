@@ -175,8 +175,21 @@ class LatticeStore:
         life = _joined_life(self.life, other.life)
         if batched and self._epochs() == other._epochs():
             # identical epochs per key ⇒ every value joins pointwise, so
-            # the stacked single-launch fast path stays valid
+            # the single-launch fast paths stay valid. Order: device-
+            # resident columns (one scatter/fused launch, zero host
+            # traffic), then the aligned host-stacked launch, then the
+            # in-place host patch for subset deltas. An epoch mismatch
+            # (reap/revive) lands in the general path below — which is
+            # exactly the cache invalidation the lifecycle needs.
+            if self.__dict__.get("_resident_cache") is not None:
+                from ..kernels import resident
+                fast = resident.try_join(self, other, life)
+                if fast is not None:
+                    return fast
             fast = _stacked_fast_join(self, other, life)
+            if fast is not None:
+                return fast
+            fast = _patched_fast_join(self, other, life)
             if fast is not None:
                 return fast
         a, b = self.as_dict(), other.as_dict()
@@ -331,13 +344,22 @@ class _StackedChunks:
     into the stacked result), keeping steady-state anti-entropy rounds at
     one kernel launch + O(keys) view assembly."""
 
-    __slots__ = ("vals", "vers", "layout", "sig")
+    __slots__ = ("vals", "vers", "layout", "sig", "_spans")
 
     def __init__(self, vals, vers, layout, sig):
         self.vals = vals
         self.vers = vers
         self.layout = layout
         self.sig = sig
+        self._spans = None
+
+    @property
+    def spans(self):
+        """(key, name) → (start, stop) row-range lookup, built lazily —
+        what the in-place patch path and the resident adopter index by."""
+        if self._spans is None:
+            self._spans = {(k, n): (s, e) for k, n, s, e in self.layout}
+        return self._spans
 
 
 def _stack_store(store: LatticeStore):
@@ -444,6 +466,85 @@ def _stacked_fast_join(a_store: LatticeStore,
     return result
 
 
+def _patched_fast_join(a_store: LatticeStore,
+                       b_store: LatticeStore,
+                       life: Tuple[Tuple[str, Life], ...] = ()):
+    """Host-cache patch path: ``a_store`` holds a stacked column cache
+    and ``b_store`` touches a *subset* of its (key, tensor) spans with
+    matching chunk counts — the single-key-write / sparse-delta case
+    that previously invalidated the cache and re-``np.concatenate``'d
+    the whole signature group on the next aligned join. Instead, copy
+    the columns once and LWW-patch only the shipped rows in place;
+    untouched keys reuse their entry objects outright. Returns None on
+    any layout change (new key, new tensor, chunk-count drift) — only a
+    real layout change pays the full rebuild."""
+    import numpy as np
+
+    sa = a_store.__dict__.get("_stacked_cache")
+    if not isinstance(sa, _StackedChunks) or not b_store.entries:
+        return None
+    ts_cls = _tensorstate_cls()
+    if ts_cls is None:
+        return None
+    from .tensor_lattice import live_rows
+
+    chunkw = sa.sig[2]
+    vdtype = np.dtype(sa.sig[3])
+    rdtype = np.dtype(sa.sig[4])
+    a_map = dict(a_store.entries)
+    # validation pass: every shipped tensor must land in an existing span
+    patches = []           # (start, local idx, vals rows, vers rows)
+    for key, val in b_store.entries:
+        if not isinstance(val, ts_cls) or key not in a_map:
+            return None
+        for name, ct in val.chunks:
+            span = sa.spans.get((key, name))
+            if span is None:
+                return None
+            n_chunks, width = ct.shape
+            if n_chunks != span[1] - span[0] or width != chunkw:
+                return None
+            li, lv, lr = live_rows(ct)
+            lv, lr = np.asarray(lv), np.asarray(lr)
+            if lv.dtype != vdtype or lr.dtype != rdtype:
+                return None
+            if li.size:
+                patches.append((span[0], li, lv, lr))
+
+    new_vals = sa.vals.copy()
+    new_vers = sa.vers.copy()
+    for start, li, lv, lr in patches:
+        rows = li.astype(np.int64) + start
+        take = lr > new_vers[rows]
+        if take.any():
+            rows = rows[take]
+            new_vals[rows] = lv[take]
+            new_vers[rows] = lr[take]
+
+    from .tensor_lattice import ChunkedTensor, TensorState
+    touched: Dict[str, Any] = {}
+    for key, B in b_store.entries:
+        A = a_map[key]
+        b_names = frozenset(n for n, _ in B.chunks)
+        chunks = []
+        for name, ct in A.chunks:
+            if name in b_names:
+                start, stop = sa.spans[(key, name)]
+                chunks.append((name, ChunkedTensor(new_vals[start:stop],
+                                                   new_vers[start:stop])))
+            else:
+                chunks.append((name, ct))
+        touched[key] = TensorState(tuple(chunks),
+                                   max(A.lamport, B.lamport))
+
+    entries = tuple((k, touched.get(k, v)) for k, v in a_store.entries)
+    result = LatticeStore(entries, life)
+    object.__setattr__(result, "_stacked_cache",
+                       _StackedChunks(new_vals, new_vers, sa.layout,
+                                      sa.sig))
+    return result
+
+
 def _batched_join_tensorstates(pairs: List[Tuple[str, Any, Any]]
                                ) -> Dict[str, Any]:
     """Join many (key, TensorState, TensorState) pairs with the chunk
@@ -534,9 +635,17 @@ def digest_select_store(store: LatticeStore, budget_bytes: int,
         (tensor_keys if isinstance(val, TensorState)
          else passthrough)[key] = val
 
-    keep = digest_keep_plan(
-        ((key, name, ct) for key, val in tensor_keys.items()
-         for name, ct in val.as_dict().items()), budget_bytes, interpret)
+    cache = store.__dict__.get("_resident_cache")
+    if cache is not None:
+        # resident stores rank from the digest columns the join kernels
+        # keep fresh: one top-k epilogue, no per-tensor recompute
+        from ..kernels import resident
+        keep = resident.keep_plan(cache, budget_bytes)
+    else:
+        keep = digest_keep_plan(
+            ((key, name, ct) for key, val in tensor_keys.items()
+             for name, ct in val.as_dict().items()), budget_bytes,
+            interpret)
     if keep is None:
         return store
 

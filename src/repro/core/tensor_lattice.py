@@ -469,20 +469,44 @@ class TensorState:
 
 # -- digest-driven chunk selection --------------------------------------------
 
+def chunk_digest_cached(ct) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-chunk (max|x|, Σx²) of a chunk tensor, memoized on the
+    (immutable) tensor object. Joins reuse untouched keys' ``ct``
+    objects, so across anti-entropy rounds only tensors that actually
+    changed recompute their digest — the rest hit this cache. Sparse
+    tensors memoize on their cached dense form. Runs via
+    ``ops.chunk_digest_auto`` (compiled Pallas on TPU, the jitted XLA
+    oracle elsewhere — identical math)."""
+    from ..kernels import ops
+
+    if ct.is_sparse:            # the digest ranks dense chunk positions
+        ct = ct.to_dense()
+    cached = ct.__dict__.get("_digest_cache")
+    if cached is None:
+        ma, ss = ops.chunk_digest_auto(ct.values)
+        cached = (np.asarray(ma), np.asarray(ss))
+        object.__setattr__(ct, "_digest_cache", cached)
+    return cached
+
+
 def digest_keep_plan(tensors, budget_bytes: int, interpret: bool = True):
     """The shared energy-ranked greedy selection behind ``digest_select``
     and ``store.digest_select_store``.
 
     ``tensors`` is an iterable of ``(scope, name, ChunkedTensor)`` (scope
     is the store key, or None for a single object). Per tensor,
-    ``kernels.ops.chunk_digest`` computes (max|x|, Σx²) per chunk in one
-    pass over HBM; live chunks are ranked globally by Σx² (energy) and
+    :func:`chunk_digest_cached` computes (max|x|, Σx²) per chunk in one
+    pass over HBM — memoized per tensor object, so untouched keys never
+    recompute; live chunks are ranked globally by Σx² (energy) and
     taken greedily until ``budget_bytes`` of chunk payload is spent.
     Chunks already at ⊥ never count against the budget. Returns None when
     everything fits, else ``{(scope, name): [kept chunk indices]}``.
+    ``interpret`` is kept for API compatibility; the digest now always
+    runs one fused dispatch per tensor (Pallas on TPU, the XLA oracle
+    elsewhere — ``interpret=True``'s per-grid-step simulation added cost
+    without changing a single output bit).
     """
-    from ..kernels.ops import chunk_digest
-
+    del interpret
     candidates = []   # (neg_energy, scope, name, chunk_idx, chunk_bytes)
     for scope, name, ct in tensors:
         if ct.is_sparse:        # the digest ranks dense chunk positions
@@ -491,8 +515,7 @@ def digest_keep_plan(tensors, budget_bytes: int, interpret: bool = True):
         live = vers > 0
         if not live.any():
             continue
-        _, sumsq = chunk_digest(ct.values, interpret=interpret)
-        sumsq = np.asarray(sumsq)
+        _, sumsq = chunk_digest_cached(ct)
         per_chunk = (ct.values.dtype.itemsize * ct.values.shape[1]
                      + np.dtype(np.int64).itemsize + np.dtype(np.int32).itemsize)
         for i in np.nonzero(live)[0]:

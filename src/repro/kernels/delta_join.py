@@ -14,6 +14,15 @@ passes over HBM. The join is purely bandwidth-bound (arithmetic intensity
                      layer uses digests to pick which chunks enter the next
                      delta (top-magnitude shipping) without a second sweep
                      over the tensor.
+* ``fused_join_digest`` — join + digest of the merged result in the same
+                     pass: the merged tile is already in VMEM, so the next
+                     round's chunk ranking costs no extra HBM traffic.
+* ``scatter_join``  — sparse ingest: a prefetched index column drives the
+                     grid over *delta* rows, merging each shipped row into
+                     the resident stacked columns (and refreshing its
+                     digest row) in place via ``input_output_aliases`` —
+                     O(shipped rows) touched, O(1) launches, regardless of
+                     store size. The device half of ``kernels/resident``.
 
 jnp oracles in ``ref.py``; jit'd wrappers with ``interpret=`` in ``ops.py``.
 """
@@ -26,6 +35,7 @@ from typing import List, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _pad_rows(x: jax.Array, pad: int) -> jax.Array:
@@ -148,6 +158,138 @@ def batched_delta_join(segments: Sequence[Tuple[jax.Array, jax.Array,
             results[i] = (ov[start:start + n_s], over[start:start + n_s])
             start += n_s
     return results
+
+
+def _fused_join_digest_kernel(av_ref, aver_ref, bv_ref, bver_ref,
+                              ov_ref, over_ref, ma_ref, ss_ref):
+    a_ver = aver_ref[...]              # [bn]
+    b_ver = bver_ref[...]
+    take_b = b_ver > a_ver
+    merged = jnp.where(take_b[:, None], bv_ref[...], av_ref[...])
+    ov_ref[...] = merged
+    over_ref[...] = jnp.maximum(a_ver, b_ver)
+    mf = merged.astype(jnp.float32)
+    ma_ref[...] = jnp.max(jnp.abs(mf), axis=-1)
+    ss_ref[...] = jnp.sum(mf * mf, axis=-1)
+
+
+def fused_join_digest(a_vals: jax.Array, a_vers: jax.Array,
+                      b_vals: jax.Array, b_vers: jax.Array,
+                      block_n: int = 256, interpret: bool = False
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """:func:`delta_join` and :func:`chunk_digest` of the merged result in
+    ONE pass over HBM: ``(out_vals, out_vers, max|out| per chunk,
+    Σout² per chunk)``. The anti-entropy hot loop needs the digest of the
+    state it just joined (to pick the next delta's chunks), and the merged
+    tile is already in VMEM — a separate digest launch would re-read the
+    whole store from HBM for two scalars per row. Ragged ``n`` is
+    zero-padded (⊥ versions ⇒ zero digest) and sliced back."""
+    n, chunk = a_vals.shape
+    bn = min(block_n, n)
+    pad = (-n) % bn
+    if pad:
+        a_vals, a_vers, b_vals, b_vers = (
+            _pad_rows(x, pad) for x in (a_vals, a_vers, b_vals, b_vers))
+    np_ = n + pad
+    ov, over, ma, ss = pl.pallas_call(
+        _fused_join_digest_kernel,
+        grid=(np_ // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, chunk), a_vals.dtype),
+            jax.ShapeDtypeStruct((np_,), a_vers.dtype),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a_vals, a_vers, b_vals, b_vers)
+    if pad:
+        return ov[:n], over[:n], ma[:n], ss[:n]
+    return ov, over, ma, ss
+
+
+def _scatter_join_kernel(idx_ref, dv_ref, dver_ref, av_ref, aver_ref,
+                         ama_ref, ass_ref, ov_ref, over_ref, oma_ref,
+                         oss_ref):
+    del idx_ref, ama_ref, ass_ref      # consumed by the index maps/aliases
+    a_ver = aver_ref[0]
+    b_ver = dver_ref[0]
+    take = b_ver > a_ver
+    merged = jnp.where(take, dv_ref[...], av_ref[...])   # [1, chunk]
+    ov_ref[...] = merged
+    over_ref[0] = jnp.maximum(a_ver, b_ver)
+    mf = merged.astype(jnp.float32)
+    oma_ref[0] = jnp.max(jnp.abs(mf))
+    oss_ref[0] = jnp.sum(mf * mf)
+
+
+def scatter_join(vals: jax.Array, vers: jax.Array,
+                 maxabs: jax.Array, sumsq: jax.Array,
+                 idx: jax.Array, d_vals: jax.Array, d_vers: jax.Array,
+                 interpret: bool = False
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Scatter-merge ``r`` sparse delta rows into resident columns and
+    refresh the touched rows' digest, all in ONE launch.
+
+    ``vals [n, chunk]`` / ``vers [n]`` are the resident stacked columns,
+    ``maxabs`` / ``sumsq`` ``[n] f32`` their per-chunk digest columns;
+    ``idx [r] int32`` are the (unique) target row positions and
+    ``d_vals [r, chunk]`` / ``d_vers [r]`` the shipped rows. The grid
+    walks the *delta* rows — the prefetched ``idx`` drives the resident
+    block index maps, so the kernel touches O(r) rows of state no matter
+    how large the store is — and ``input_output_aliases`` carries every
+    untouched row through unchanged (on TPU the update happens in the
+    resident buffers; no O(n) copy). Duplicate positions are permitted
+    only when their merged content is identical (the pad-row convention:
+    ⊥-versioned pad rows re-write a row's existing content)."""
+    n, chunk = vals.shape
+    r = int(idx.shape[0])
+    if r == 0:
+        return vals, vers, maxabs, sumsq
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r,),
+        in_specs=[
+            pl.BlockSpec((1, chunk), lambda i, idx: (i, 0)),        # d_vals
+            pl.BlockSpec((1,), lambda i, idx: (i,)),                # d_vers
+            pl.BlockSpec((1, chunk), lambda i, idx: (idx[i], 0)),   # vals
+            pl.BlockSpec((1,), lambda i, idx: (idx[i],)),           # vers
+            pl.BlockSpec((1,), lambda i, idx: (idx[i],)),           # maxabs
+            pl.BlockSpec((1,), lambda i, idx: (idx[i],)),           # sumsq
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk), lambda i, idx: (idx[i], 0)),
+            pl.BlockSpec((1,), lambda i, idx: (idx[i],)),
+            pl.BlockSpec((1,), lambda i, idx: (idx[i],)),
+            pl.BlockSpec((1,), lambda i, idx: (idx[i],)),
+        ],
+    )
+    return pl.pallas_call(
+        _scatter_join_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n, chunk), vals.dtype),
+            jax.ShapeDtypeStruct((n,), vers.dtype),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        # operand order counts the prefetched idx as input 0: vals=3,
+        # vers=4, maxabs=5, sumsq=6 alias onto the four outputs so rows
+        # no grid step covers keep their resident values
+        input_output_aliases={3: 0, 4: 1, 5: 2, 6: 3},
+        interpret=interpret,
+    )(idx, d_vals, d_vers, vals, vers, maxabs, sumsq)
 
 
 def _digest_kernel(x_ref, maxabs_ref, sumsq_ref):

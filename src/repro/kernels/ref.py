@@ -79,3 +79,33 @@ def batched_delta_join_ref(segments) -> list:
 def chunk_digest_ref(x) -> Tuple[jax.Array, jax.Array]:
     xf = x.astype(jnp.float32)
     return jnp.max(jnp.abs(xf), axis=-1), jnp.sum(xf * xf, axis=-1)
+
+
+def fused_join_digest_ref(a_vals, a_vers, b_vals, b_vers
+                          ) -> Tuple[jax.Array, jax.Array,
+                                     jax.Array, jax.Array]:
+    """Join + digest-of-the-merge oracle (kernels fuse these into one
+    HBM pass)."""
+    ov, over = delta_join_ref(a_vals, a_vers, b_vals, b_vers)
+    ma, ss = chunk_digest_ref(ov)
+    return ov, over, ma, ss
+
+
+def scatter_join_ref(vals, vers, maxabs, sumsq, idx, d_vals, d_vers
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Sparse scatter-ingest oracle: merge ``r`` delta rows into resident
+    stacked columns at positions ``idx`` and refresh those rows' digest;
+    every other row is untouched. Duplicate positions are only legal when
+    their merged content is identical (the kernel's pad-row convention),
+    so write order cannot matter."""
+    if int(idx.shape[0]) == 0:
+        return vals, vers, maxabs, sumsq
+    cur_v = vals[idx]
+    cur_r = vers[idx]
+    take = d_vers > cur_r
+    merged = jnp.where(take[:, None], d_vals, cur_v)
+    mf = merged.astype(jnp.float32)
+    return (vals.at[idx].set(merged),
+            vers.at[idx].set(jnp.maximum(cur_r, d_vers)),
+            maxabs.at[idx].set(jnp.max(jnp.abs(mf), axis=-1)),
+            sumsq.at[idx].set(jnp.sum(mf * mf, axis=-1)))

@@ -1,0 +1,440 @@
+"""Device-resident store columns: the accelerator-side half of the store.
+
+``core.store``'s host ``_StackedChunks`` cache made the batched join one
+*launch*, but every launch still staged the whole signature group's
+columns host→device, and the digest/energy machinery re-read the store
+from scratch. This module makes the stacked columns **persistent device
+buffers** so a steady-state anti-entropy round never moves the store at
+all:
+
+* :class:`ResidentColumns` owns one signature group's stacked
+  ``[rows, chunk]`` values + ``[rows]`` versions as jax.Arrays, **plus**
+  the per-chunk digest columns (max|x|, Σx²) the selection policy ranks
+  by, kept fresh by the kernels themselves, and a host mirror of the
+  version column so digest *summaries* (``core.digest.store_digest``)
+  are served with zero device traffic.
+* :func:`adopt` builds the cache once from a stackable store (one upload
+  + one digest launch) and attaches it to the (immutable) store object;
+  :func:`ensure` is the idempotent entry the replica engine calls each
+  round.
+* :func:`try_join` is the join fast path ``core.store`` consults first:
+  a sparse wire delta becomes ONE ``scatter_join`` launch (grid over the
+  shipped rows, resident columns aliased in place, digest rows refreshed
+  in the same pass); two resident stores with identical layout become
+  ONE ``fused_join_digest`` launch. The result store carries the new
+  cache, so rounds chain without ever rebuilding columns.
+* :func:`keep_plan` turns the maintained Σx² column into the
+  ``DigestBudget`` energy selection with one top-k epilogue — no
+  per-tensor digest recompute.
+
+Ownership and invalidation: a cache belongs to exactly one immutable
+``LatticeStore`` value and is never mutated — joins produce fresh
+(functionally-updated) columns for the result store, so old snapshots
+stay valid. Anything that changes the column *layout* — a new key, a new
+tensor, a chunk-count change, a reap/revive epoch bump, a rebalance that
+drops keys — simply fails the fast-path checks: the join falls back to
+the host paths (which stay property-test-parity with the oracles) and
+the next :func:`ensure` re-adopts from the new layout. There is no dirty
+bit to get wrong; epoch equality and signature equality *are* the dirty
+tracking. :func:`spill` materializes the columns back to a host
+``_StackedChunks`` (counted device→host) when a store must leave the
+device, e.g. before a signature-changing rewrite.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ops
+
+VVIEW = "_resident_cache"      # attribute slot on LatticeStore objects
+
+
+class ResidentColumns:
+    """One signature group's device-resident stacked columns + digest.
+
+    ``vals [rows, chunk]`` / ``vers [rows]`` are the chunk data,
+    ``maxabs`` / ``sumsq`` ``[rows] f32`` the per-chunk digest columns
+    (always fresh: every join kernel writes them alongside the merge).
+    ``layout`` / ``sig`` / ``spans`` mirror the host ``_StackedChunks``
+    bookkeeping; ``vers_host`` is a host copy of the version column kept
+    in lockstep by O(shipped rows) numpy work, so digest summaries never
+    read the device."""
+
+    __slots__ = ("vals", "vers", "maxabs", "sumsq", "layout", "sig",
+                 "vers_host", "spans")
+
+    def __init__(self, vals, vers, maxabs, sumsq, layout, sig, vers_host,
+                 spans=None):
+        self.vals = vals
+        self.vers = vers
+        self.maxabs = maxabs
+        self.sumsq = sumsq
+        self.layout = layout
+        self.sig = sig
+        self.vers_host = vers_host
+        self.spans = spans if spans is not None else {
+            (k, n): (s, e) for k, n, s, e in layout}
+
+    @property
+    def rows(self) -> int:
+        return int(self.vals.shape[0])
+
+    def nbytes_device(self) -> int:
+        return sum(int(x.nbytes) for x in
+                   (self.vals, self.vers, self.maxabs, self.sumsq))
+
+
+def resident_of(store) -> Optional[ResidentColumns]:
+    return store.__dict__.get(VVIEW)
+
+
+def _upload(x: np.ndarray) -> jax.Array:
+    ops.counters.count_h2d(x)
+    return jnp.asarray(x)
+
+
+def _stack_densified(store):
+    """``core.store._stack_store`` with sparse tensors densified first: a
+    replica whose state arrived entirely as wire deltas holds
+    ``SparseChunks`` values (not host-stackable), but their dense form is
+    exactly what the resident columns hold anyway. Builds the columnar
+    view without attaching a host cache; returns None when the store is
+    not tensor-only / signature-uniform / non-empty."""
+    from ..core.store import _StackedChunks, _tensorstate_cls
+    ts_cls = _tensorstate_cls()
+    if (ts_cls is None or not store.entries
+            or not all(isinstance(v, ts_cls) for _, v in store.entries)):
+        return None
+    parts_v, parts_r, layout = [], [], []
+    chunkw = dtype = vdtype = None
+    row = 0
+    for key, val in store.entries:
+        for name, ct in val.chunks:
+            if getattr(ct, "is_sparse", False):
+                ct = ct.to_dense()
+            v, r = np.asarray(ct.values), np.asarray(ct.versions)
+            if chunkw is None:
+                chunkw, dtype, vdtype = v.shape[1], v.dtype, r.dtype
+            elif (v.shape[1] != chunkw or v.dtype != dtype
+                  or r.dtype != vdtype):
+                return None
+            parts_v.append(v)
+            parts_r.append(r)
+            layout.append((key, name, row, row + v.shape[0]))
+            row += v.shape[0]
+    if not parts_v:
+        return None
+    sig = (tuple(k for k, _ in store.entries),
+           tuple((k, n, stop - start) for k, n, start, stop in layout),
+           chunkw, str(dtype), str(vdtype))
+    return _StackedChunks(np.concatenate(parts_v), np.concatenate(parts_r),
+                          tuple(layout), sig)
+
+
+def adopt(store) -> Optional[ResidentColumns]:
+    """Build (or fetch) the resident cache for ``store``: one host stack
+    scan, one upload of the columns, one digest launch. Sparse tensors
+    (wire-decoded state) densify into the columns. Returns None when the
+    store is not stackable (non-tensor values, mixed signatures,
+    empty)."""
+    cached = resident_of(store)
+    if cached is not None:
+        return cached
+    from ..core.store import _stack_store
+    sa = _stack_store(store)
+    if sa is None:
+        sa = _stack_densified(store)
+    if sa is None:
+        return None
+    vals = _upload(sa.vals)
+    vers = _upload(sa.vers)
+    ma, ss = ops.chunk_digest_auto(vals)
+    cache = ResidentColumns(vals, vers, ma, ss, sa.layout, sa.sig,
+                            np.asarray(sa.vers))
+    object.__setattr__(store, VVIEW, cache)
+    return cache
+
+
+def ensure(store) -> Optional[ResidentColumns]:
+    """Idempotent :func:`adopt` — what the replica engine calls once per
+    anti-entropy round so layout changes re-resident lazily."""
+    return adopt(store)
+
+
+def spill(store):
+    """Materialize the resident columns back into a host
+    ``_StackedChunks`` (attached as the store's host cache) — the exit
+    path when a store must leave the device. Counted device→host."""
+    cache = resident_of(store)
+    if cache is None:
+        return None
+    from ..core.store import _StackedChunks
+    ops.counters.count_d2h(cache.vals, cache.vers)
+    sc = _StackedChunks(np.asarray(cache.vals), np.asarray(cache.vers),
+                        cache.layout, cache.sig)
+    object.__setattr__(store, "_stacked_cache", sc)
+    return sc
+
+
+# ---------------------------------------------------------------------------
+# The join fast path
+# ---------------------------------------------------------------------------
+
+def try_join(a_store, b_store, life):
+    """Resident fast path for ``a_store.join(b_store)`` (caller has
+    already verified epoch agreement and pre-joined ``life``). Returns
+    the joined store carrying a fresh resident cache, or None when the
+    delta does not map onto the resident layout (fall back to the host
+    paths)."""
+    ra = resident_of(a_store)
+    if ra is None:
+        return None
+    rb = resident_of(b_store)
+    if rb is not None and rb.sig == ra.sig:
+        return _aligned_join(ra, rb, a_store, b_store, life)
+    plan = _scatter_plan(ra, b_store)
+    if plan is None:
+        return None
+    return _scatter_ingest(ra, a_store, b_store, life, plan)
+
+
+def _aligned_join(ra: ResidentColumns, rb: ResidentColumns,
+                  a_store, b_store, life):
+    """Two resident stores with the identical stacked layout: the whole
+    join (and the next round's digest) is ONE fused launch."""
+    ov, over, ma, ss = ops.fused_join_digest(ra.vals, ra.vers,
+                                             rb.vals, rb.vers)
+    entries, li = [], 0
+    from ..core.tensor_lattice import ChunkedTensor, TensorState
+    for (key, A), (_, B) in zip(a_store.entries, b_store.entries):
+        chunks = []
+        for name, _ct in A.chunks:
+            _, _, start, stop = ra.layout[li]
+            li += 1
+            chunks.append((name, ChunkedTensor(ov[start:stop],
+                                               over[start:stop])))
+        entries.append((key, TensorState(tuple(chunks),
+                                         max(A.lamport, B.lamport))))
+    from ..core.store import LatticeStore
+    result = LatticeStore(tuple(entries), life)
+    cache = ResidentColumns(ov, over, ma, ss, ra.layout, ra.sig,
+                            np.maximum(ra.vers_host, rb.vers_host),
+                            ra.spans)
+    object.__setattr__(result, VVIEW, cache)
+    return result
+
+
+def _scatter_plan(ra: ResidentColumns, b_store):
+    """Validate that every tensor of ``b_store`` lands inside the
+    resident layout (same key/tensor/chunk-count/dtype) and assemble the
+    global scatter rows: ``(idx [r] int32 np, d_vals, d_vers, lamports)``
+    where d_vals/d_vers are host numpy (counted as staging at launch) or
+    already-device columns from a ``decode_store(..., to_device=True)``
+    payload (zero staging). Returns None on any layout mismatch."""
+    from ..core.tensor_lattice import TensorState, live_rows
+
+    chunkw = ra.sig[2]
+    vdtype = np.dtype(ra.sig[3])
+    rdtype = np.dtype(ra.sig[4])
+    a_keys = frozenset(ra.sig[0])
+    for key, val in b_store.entries:
+        if not isinstance(val, TensorState) or key not in a_keys:
+            return None
+        for name, ct in val.chunks:
+            span = ra.spans.get((key, name))
+            if span is None:
+                return None
+            n_chunks, width = ct.shape
+            if (n_chunks != span[1] - span[0] or width != chunkw):
+                return None
+
+    dev = b_store.__dict__.get("_device_cols")
+    if dev is not None:
+        got = _device_plan(ra, b_store, dev, chunkw, vdtype, rdtype)
+        if got is not None:
+            return got
+
+    idx_parts: List[np.ndarray] = []
+    val_parts: List[np.ndarray] = []
+    ver_parts: List[np.ndarray] = []
+    for key, val in b_store.entries:
+        for name, ct in val.chunks:
+            start, _stop = ra.spans[(key, name)]
+            li, lv, lr = live_rows(ct)
+            if li.size == 0:
+                continue
+            lv = np.asarray(lv)
+            lr = np.asarray(lr)
+            if lv.dtype != vdtype or lr.dtype != rdtype:
+                return None
+            idx_parts.append(li.astype(np.int32) + np.int32(start))
+            val_parts.append(lv)
+            ver_parts.append(lr)
+    if not idx_parts:
+        empty = np.zeros((0,), np.int32)
+        return (empty, np.zeros((0, chunkw), vdtype),
+                np.zeros((0,), rdtype))
+    return (np.concatenate(idx_parts),
+            np.concatenate(val_parts, axis=0),
+            np.concatenate(ver_parts))
+
+
+def _device_plan(ra, b_store, dev_groups, chunkw, vdtype, rdtype):
+    """Scatter plan over columns a decode-to-device payload already put
+    on the accelerator: only the small int32 row-index column is built on
+    host; values/versions never re-stage. Requires the payload to be one
+    signature group matching the resident signature."""
+    if len(dev_groups) != 1:
+        return None
+    g = dev_groups[0]
+    if (g.chunk_w != chunkw or np.dtype(g.dstr) != vdtype
+            or np.dtype(g.vstr) != rdtype):
+        return None
+    idx_parts: List[np.ndarray] = []
+    row = 0
+    for key, name, n_chunks, rows in g.members:
+        span = ra.spans.get((key, name))
+        if span is None or n_chunks != span[1] - span[0]:
+            return None
+        idx_parts.append(g.idx_col[row:row + rows].astype(np.int32)
+                         + np.int32(span[0]))
+        row += rows
+    idx = (np.concatenate(idx_parts) if idx_parts
+           else np.zeros((0,), np.int32))
+    return (idx, g.vals_dev, g.vers_dev)
+
+
+def _pad_bucket(r: int) -> int:
+    """Round the scatter grid up to a power-of-two bucket (min 8) so the
+    per-``r`` jit retrace cost is amortized across rounds of varying
+    delta sizes."""
+    b = 8
+    while b < r:
+        b <<= 1
+    return b
+
+
+def _scatter_ingest(ra: ResidentColumns, a_store, b_store, life, plan):
+    """One ``scatter_join`` launch applies the whole delta to the
+    resident columns; the result store reuses every untouched key's entry
+    object and views the touched segments out of the new columns."""
+    from ..core.store import LatticeStore
+    from ..core.tensor_lattice import ChunkedTensor, TensorState
+
+    idx, d_vals, d_vers = plan
+    r = int(idx.shape[0])
+    n = ra.rows
+    d_vers_host = np.asarray(d_vers) if isinstance(d_vers, np.ndarray) \
+        else None
+
+    if r and r < n:
+        # pad the grid to a bucket so repeated rounds share one trace:
+        # pad rows target a row no real row touches, with ⊥ versions, so
+        # they re-write existing content (a no-op even when duplicated)
+        bucket = _pad_bucket(r)
+        pad = min(bucket, n) - r if bucket > r else 0
+        if pad > 0:
+            # a row no real delta row targets (idx is unique): first gap
+            # in the sorted positions, or r itself when they are 0..r-1
+            s = np.sort(idx)
+            gap = np.flatnonzero(s != np.arange(r, dtype=s.dtype))
+            free = int(gap[0]) if gap.size else r
+            idx = np.concatenate([idx, np.full(pad, free, np.int32)])
+            zpad_v = jnp.zeros((pad,) + tuple(d_vals.shape[1:]),
+                               d_vals.dtype)
+            zpad_r = jnp.zeros((pad,), d_vers.dtype)
+            if isinstance(d_vals, np.ndarray):
+                d_vals = np.concatenate(
+                    [d_vals, np.asarray(zpad_v)], axis=0)
+                d_vers = np.concatenate([d_vers, np.asarray(zpad_r)])
+            else:
+                d_vals = jnp.concatenate([d_vals, zpad_v], axis=0)
+                d_vers = jnp.concatenate([d_vers, zpad_r])
+
+    ov, over, ma, ss = ops.scatter_join(ra.vals, ra.vers, ra.maxabs,
+                                        ra.sumsq, idx, d_vals, d_vers)
+
+    # host mirror of the version column: O(r) numpy, no device read
+    if r:
+        vh = ra.vers_host.copy()
+        real_idx = idx[:r]
+        if d_vers_host is None:
+            d_vers_host = np.asarray(d_vers)[:r]
+            ops.counters.count_d2h(d_vers_host)
+        take = d_vers_host[:r] > vh[real_idx]
+        vh[real_idx[take]] = d_vers_host[:r][take]
+    else:
+        vh = ra.vers_host
+
+    touched: Dict[str, Any] = {}
+    a_map = dict(a_store.entries)
+    for key, B in b_store.entries:
+        A = a_map[key]
+        b_names = frozenset(n for n, _ in B.chunks)
+        chunks = []
+        for name, ct in A.chunks:
+            if name in b_names:
+                start, stop = ra.spans[(key, name)]
+                chunks.append((name, ChunkedTensor(ov[start:stop],
+                                                   over[start:stop])))
+            else:
+                chunks.append((name, ct))
+        touched[key] = TensorState(tuple(chunks),
+                                   max(A.lamport, B.lamport))
+
+    entries = tuple((k, touched.get(k, v)) for k, v in a_store.entries)
+    result = LatticeStore(entries, life)
+    cache = ResidentColumns(ov, over, ma, ss, ra.layout, ra.sig, vh,
+                            ra.spans)
+    object.__setattr__(result, VVIEW, cache)
+    return result
+
+
+# ---------------------------------------------------------------------------
+# Energy selection from the maintained digest columns
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _topk_live(sumsq, live, k):
+    masked = jnp.where(live, sumsq, -1.0)
+    return jax.lax.top_k(masked, k)[1]
+
+
+def keep_plan(cache: ResidentColumns, budget_bytes: int
+              ) -> Optional[Dict[Tuple[str, str], list]]:
+    """``tensor_lattice.digest_keep_plan`` served from the resident
+    digest columns: per-chunk payload bytes are constant within a
+    signature group, so the greedy energy ranking is exactly a top-k
+    prefix over the maintained Σx² column — one device epilogue instead
+    of one digest recompute per tensor. Returns None when every live
+    chunk fits the budget, else ``{(key, name): [kept chunk indices]}``
+    (identical contract, identical tie order: ``lax.top_k`` prefers
+    lower indices and the column order is (key, name, chunk) ascending,
+    the same order the host greedy sorts ties by)."""
+    per_chunk = (np.dtype(cache.sig[3]).itemsize * cache.sig[2]
+                 + np.dtype(np.int64).itemsize
+                 + np.dtype(np.int32).itemsize)
+    live = cache.vers_host > 0
+    n_live = int(live.sum())
+    if n_live * per_chunk <= budget_bytes:
+        return None
+    k = min(int(budget_bytes // per_chunk), cache.rows)
+    keep: Dict[Tuple[str, str], list] = {}
+    if k <= 0:
+        return keep
+    ops.counters.launches += 1          # the ranking epilogue
+    rows = np.asarray(_topk_live(cache.sumsq, jnp.asarray(live), k))
+    ops.counters.count_d2h(rows)
+    starts = np.fromiter((s for _, _, s, _ in cache.layout), np.int64,
+                         len(cache.layout))
+    seg = np.searchsorted(starts, rows, side="right") - 1
+    for row, si in zip(rows.tolist(), seg.tolist()):
+        key, name, start, _stop = cache.layout[si]
+        keep.setdefault((key, name), []).append(int(row) - start)
+    return keep

@@ -292,13 +292,42 @@ def store_body_is_empty(body) -> bool:
     return len(view) < off + 4 or _U32.unpack_from(view, off)[0] == 0
 
 
-def decode_store(buf) -> LatticeStore:
+class _DeviceGroup:
+    """One signature group's decoded columns, uploaded to the device at
+    decode time (``decode_store(..., to_device=True)``) so the resident
+    scatter ingest (``kernels.resident._device_plan``) launches over
+    jax.Array operands and stages zero extra bytes. ``members`` resolves
+    the run-length list to ``(key, name, n_chunks, rows)`` so the ingest
+    never needs the payload's descriptor tables."""
+
+    __slots__ = ("chunk_w", "dstr", "vstr", "members", "idx_col",
+                 "vals_dev", "vers_dev")
+
+    def __init__(self, chunk_w, dstr, vstr, members, idx_col,
+                 vals_dev, vers_dev):
+        self.chunk_w = chunk_w
+        self.dstr = dstr
+        self.vstr = vstr
+        self.members = members
+        self.idx_col = idx_col
+        self.vals_dev = vals_dev
+        self.vers_dev = vers_dev
+
+
+def decode_store(buf, to_device: bool = False) -> LatticeStore:
     """Open a stacked payload back into a :class:`LatticeStore`.
 
     Tensor values come back as :class:`SparseChunks` whose columns are
     zero-copy views into ``buf`` — hand the result straight to
     ``resident.join(decoded)`` and the store's join dispatches every
     tensor through the O(shipped-rows) gather/merge/scatter path.
+
+    ``to_device=True`` additionally uploads each signature group's
+    values/versions columns once (counted as host→device staging) and
+    attaches the group records as the store's ``_device_cols`` — a
+    resident receiver's scatter ingest then runs entirely over device
+    operands, so the only host→device bytes of the whole round are the
+    delta columns themselves.
     """
     cur = _Cursor(buf)
     n_keys = cur.unpack(_U32)
@@ -329,6 +358,7 @@ def decode_store(buf) -> LatticeStore:
         descs.append((key_i, name, n_chunks))
 
     n_groups = cur.unpack(_U16)
+    dev_groups: List[_DeviceGroup] = []
     for _ in range(n_groups):
         dstr = cur.get_str(width=_U16)
         vstr = cur.get_str(width=_U16)
@@ -358,6 +388,16 @@ def decode_store(buf) -> LatticeStore:
                 n_chunks, idx_col[row:row + rows],
                 vals_col[row:row + rows], vers_col[row:row + rows])
             row += rows
+        if to_device:
+            from ..kernels import ops
+            ops.counters.count_h2d(vals_col, vers_col)
+            import jax.numpy as jnp
+            dev_groups.append(_DeviceGroup(
+                chunk_w, dstr, vstr,
+                [(keys[descs[d][0]], descs[d][1], descs[d][2], rows)
+                 for d, rows in members],
+                np.asarray(idx_col), jnp.asarray(vals_col),
+                jnp.asarray(vers_col)))
 
     life: List[Tuple[str, Life]] = []
     n_life = cur.unpack(_U32)
@@ -368,9 +408,12 @@ def decode_store(buf) -> LatticeStore:
 
     for key_i, chunks in tensor_chunks.items():
         values[key_i] = TensorState.of(chunks, lamport=lamports[key_i])
-    return LatticeStore(tuple(sorted((keys[i], v)
-                                     for i, v in values.items())),
-                        tuple(sorted(life)))
+    store = LatticeStore(tuple(sorted((keys[i], v)
+                                      for i, v in values.items())),
+                         tuple(sorted(life)))
+    if dev_groups:
+        object.__setattr__(store, "_device_cols", tuple(dev_groups))
+    return store
 
 
 # ---------------------------------------------------------------------------
@@ -392,12 +435,14 @@ def encode_value(value: Any, compress: bool = False) -> bytes:
     return bytes([_TAG_OPAQUE]) + pickle.dumps(value, protocol=4)
 
 
-def decode_value(buf) -> Any:
+def decode_value(buf, to_device: bool = False) -> Any:
     view = memoryview(buf)
     tag = view[0]
     if tag == _TAG_STORE:
-        return decode_store(view[1:])
+        return decode_store(view[1:], to_device=to_device)
     if tag == _TAG_TENSORSTATE:
+        # bare TensorStates unwrap from the one-key store, which would
+        # drop the device columns with the wrapper — no to_device here
         store = decode_store(view[1:])
         return store.get(_SINGLE, TensorState)
     if tag == _TAG_OPAQUE:

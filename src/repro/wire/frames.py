@@ -158,10 +158,17 @@ class WireCodec:
     payload's stacked columns (``codec.encode_store(compress=...)``) —
     off by default because compressed columns cannot be zero-copy
     ingested; worth it on links where bytes dominate CPU.
+
+    ``to_device=True`` decodes every incoming store payload with
+    ``codec.decode_store(to_device=True)``: the stacked columns are
+    uploaded once at decode time, so a device-resident receiver
+    (``kernels.resident``) scatter-ingests them with zero extra staging.
+    Composes with ``compress`` (columns inflate on host first).
     """
 
-    def __init__(self, compress: bool = False):
+    def __init__(self, compress: bool = False, to_device: bool = False):
         self.compress = compress
+        self.to_device = to_device
 
     def encode_msg(self, msg: Tuple, *, full_state: bool = False
                    ) -> Optional[FrameBytes]:
@@ -226,6 +233,7 @@ class WireCodec:
     def decode_msg(self, frame) -> Tuple:
         from .codec import decode_digest, decode_store, decode_value
 
+        dev = self.to_device
         kind, payload = decode_frame(frame)
         if kind == "ack":
             return ("ack", _ACK.unpack_from(payload, 0)[0])
@@ -236,20 +244,21 @@ class WireCodec:
                 return ("reap", key, int(epoch), float(expiry))
             return ("reap-ack", key, int(epoch), float(expiry), int(ok))
         if kind == "handoff":
-            return ("handoff", decode_value(payload))
+            return ("handoff", decode_value(payload, to_device=dev))
         if kind == "digest":
             return ("digest", decode_digest(payload))
         if kind == "digest-resp":
-            return ("digest-resp", decode_store(payload))
+            return ("digest-resp", decode_store(payload, to_device=dev))
         if kind in ("delta", "state", "membership"):
             mode = payload[0]
             if mode == 0:
                 _, plen = _DELTA_BASIC.unpack_from(payload, 0)
                 off = _DELTA_BASIC.size
-                return ("delta", decode_value(payload[off:off + plen]))
+                return ("delta", decode_value(payload[off:off + plen],
+                                              to_device=dev))
             _, n, has_ghost, plen = _DELTA_CAUSAL.unpack_from(payload, 0)
             off = _DELTA_CAUSAL.size
-            d = decode_value(payload[off:off + plen])
+            d = decode_value(payload[off:off + plen], to_device=dev)
             ghost = (decode_value(payload[off + plen:]) if has_ghost
                      else None)
             return ("delta", d, n, ghost)

@@ -166,3 +166,113 @@ def test_kernel_join_equals_tensorstate_join():
                                   np.asarray(kv))
     np.testing.assert_array_equal(np.asarray(lattice_join.versions),
                                   np.asarray(kvers))
+
+
+# ---------------------------------------------------------------------------
+# Fused join+digest and scatter-ingest (the resident-store kernels)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,chunk,bn", [
+    (64, 128, 32), (100, 128, 32),   # ragged row count
+    (7, 256, 8), (13, 128, 13),
+])
+def test_fused_join_digest_matches_ref(dtype, n, chunk, bn):
+    av, avers = _mk(n, chunk, dtype, 30)
+    bv, bvers = _mk(n, chunk, dtype, 31)
+    ov, overs, ma, ss = ops.fused_join_digest(av, avers, bv, bvers,
+                                              block_n=bn, interpret=True)
+    rv, rvers, rma, rss = ops.fused_join_digest_ref(av, avers, bv, bvers)
+    np.testing.assert_array_equal(np.asarray(ov), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(overs), np.asarray(rvers))
+    np.testing.assert_allclose(np.asarray(ma), np.asarray(rma), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(ss), np.asarray(rss), rtol=1e-5)
+
+
+def test_fused_join_digest_auto_dispatch_matches_interpret():
+    """interpret=None (the hot-path default: XLA oracle on CPU) computes
+    exactly what the interpret-mode Pallas kernel computes."""
+    av, avers = _mk(24, 128, jnp.float32, 32)
+    bv, bvers = _mk(24, 128, jnp.float32, 33)
+    auto = ops.fused_join_digest(av, avers, bv, bvers)
+    pallas = ops.fused_join_digest(av, avers, bv, bvers, interpret=True)
+    for x, y in zip(auto, pallas):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-5)
+
+
+def _mk_scatter(n, r, chunk, seed, vdtype=np.float32):
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(rng.normal(size=(n, chunk)).astype(vdtype))
+    vers = jnp.asarray(rng.integers(0, 50, size=(n,)).astype(np.int32))
+    ma, ss = ops.chunk_digest_ref(vals)
+    idx = np.sort(rng.choice(n, size=r, replace=False)).astype(np.int32)
+    d_vals = jnp.asarray(rng.normal(size=(r, chunk)).astype(vdtype))
+    d_vers = jnp.asarray(rng.integers(0, 80, size=(r,)).astype(np.int32))
+    return vals, vers, ma, ss, jnp.asarray(idx), d_vals, d_vers
+
+
+@pytest.mark.parametrize("n,r,chunk", [
+    (32, 5, 128), (64, 64, 128),     # full coverage
+    (17, 3, 256), (8, 1, 128),
+])
+def test_scatter_join_matches_ref(n, r, chunk):
+    args = _mk_scatter(n, r, chunk, 40)
+    outs = ops.scatter_join(*args, interpret=True)
+    refs = ops.scatter_join_ref(*args)
+    for x, y in zip(outs, refs):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-5)
+
+
+def test_scatter_join_preserves_untouched_rows():
+    """Rows not listed in idx come back bit-identical (the aliased
+    in-place contract of the resident columns)."""
+    vals, vers, ma, ss, idx, d_vals, d_vers = _mk_scatter(40, 4, 128, 41)
+    ov, overs, oma, oss = ops.scatter_join(vals, vers, ma, ss, idx,
+                                           d_vals, d_vers, interpret=True)
+    touched = set(np.asarray(idx).tolist())
+    keep = np.array([i for i in range(40) if i not in touched])
+    np.testing.assert_array_equal(np.asarray(ov)[keep],
+                                  np.asarray(vals)[keep])
+    np.testing.assert_array_equal(np.asarray(overs)[keep],
+                                  np.asarray(vers)[keep])
+    np.testing.assert_array_equal(np.asarray(oma)[keep],
+                                  np.asarray(ma)[keep])
+    np.testing.assert_array_equal(np.asarray(oss)[keep],
+                                  np.asarray(ss)[keep])
+
+
+def test_scatter_join_empty_idx_is_a_launch_free_noop():
+    vals, vers, ma, ss, _, _, _ = _mk_scatter(16, 2, 128, 42)
+    empty = jnp.zeros((0,), jnp.int32)
+    snap = ops.counters.snapshot()
+    outs = ops.scatter_join(vals, vers, ma, ss, empty,
+                            jnp.zeros((0, 128), vals.dtype),
+                            jnp.zeros((0,), vers.dtype))
+    assert ops.counters.since(snap)["launches"] == 0
+    assert outs[0] is vals and outs[1] is vers
+
+
+def test_scatter_join_auto_dispatch_matches_interpret():
+    args = _mk_scatter(30, 6, 128, 43)
+    auto = ops.scatter_join(*args)
+    pallas = ops.scatter_join(*args, interpret=True)
+    for x, y in zip(auto, pallas):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-5)
+
+
+def test_counters_count_launches_and_numpy_staging_only():
+    """One wrapper call = one launch; numpy operands count their nbytes
+    as host→device staging, device-resident jax.Arrays count zero."""
+    av_np = np.random.default_rng(44).normal(size=(8, 128)) \
+        .astype(np.float32)
+    avers_np = np.ones((8,), np.int32)
+    snap = ops.counters.snapshot()
+    ops.fused_join_digest(av_np, avers_np, av_np, avers_np)
+    d = ops.counters.since(snap)
+    assert d["launches"] == 1
+    assert d["h2d_bytes"] == 2 * (av_np.nbytes + avers_np.nbytes)
+    av, avers = jnp.asarray(av_np), jnp.asarray(avers_np)
+    snap = ops.counters.snapshot()
+    ops.fused_join_digest(av, avers, av, avers)
+    d = ops.counters.since(snap)
+    assert d["launches"] == 1 and d["h2d_bytes"] == 0

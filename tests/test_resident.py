@@ -1,0 +1,363 @@
+"""Device-resident store columns (kernels.resident): parity of the
+one-launch resident paths against the host-staged paths and the per-key
+loop oracle, counter accounting (O(1) launches, delta-only staging),
+cache survival across reaps/handoffs via re-adoption, the in-place
+stacked patch path, the digest memo, and resident replicas over the
+device-decoding wire."""
+
+import numpy as np
+import pytest
+
+from repro.core.digest import store_digest
+from repro.core.store import LatticeStore, digest_select_store
+from repro.core.tensor_lattice import (ChunkedTensor, TensorState,
+                                       sparse_chunks)
+from repro.kernels import ops, resident
+
+CHUNK = 32
+ROW_BYTES = CHUNK * 4 + 12          # f32 payload + i64 index + i32 version
+
+
+def _mk_store(sizes, chunk=CHUNK, seed=0, version=1, n_tensors=1,
+              dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    out = {}
+    for i, n in enumerate(sizes):
+        ts = {}
+        for t in range(n_tensors):
+            vals = rng.normal(size=(n, chunk)).astype(dtype)
+            vers = (rng.integers(0, 3, size=(n,)).astype(np.int32) * 2
+                    + version)
+            ts[f"t{t}"] = ChunkedTensor(vals, vers)
+        out[f"k{i}"] = TensorState.of(ts, lamport=version)
+    return LatticeStore.of(out)
+
+
+def _mk_sparse_delta(touch, n_chunks, chunk=CHUNK, seed=100, version=9,
+                     n_tensors=1, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    out = {}
+    for key in touch:
+        ts = {}
+        for t in range(n_tensors):
+            r = min(2, n_chunks)
+            idx = np.sort(rng.choice(n_chunks, size=r,
+                                     replace=False)).astype(np.int32)
+            vals = rng.normal(size=(r, chunk)).astype(dtype)
+            vers = np.full((r,), version * 2 + 1, np.int32)
+            ts[f"t{t}"] = sparse_chunks(n_chunks, idx, vals, vers)
+        out[key] = TensorState.of(ts, lamport=version)
+    return LatticeStore.of(out)
+
+
+def _stores_equal(a, b):
+    assert store_digest(a) == store_digest(b)
+    for (k, va), (k2, vb) in zip(a.entries, b.entries):
+        assert k == k2
+        for (n, ca), (n2, cb) in zip(va.chunks, vb.chunks):
+            assert n == n2
+            np.testing.assert_allclose(np.asarray(ca.values),
+                                       np.asarray(cb.values), rtol=1e-6)
+            np.testing.assert_array_equal(np.asarray(ca.versions),
+                                          np.asarray(cb.versions))
+
+
+# ---------------------------------------------------------------------------
+# Join parity: resident ≡ host-staged ≡ per-key loop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sizes", [
+    [4, 4, 4, 4],                   # uniform rows
+    [1, 3, 7, 13, 5],               # ragged chunk counts
+    [8],                            # single key
+])
+def test_scatter_ingest_matches_loop_join(sizes):
+    a = _mk_store(sizes, seed=0)
+    d = _mk_sparse_delta([f"k{i}" for i in range(0, len(sizes), 2)],
+                         n_chunks=min(sizes), seed=7)
+    # the delta's tensors must exist within each key's layout: regenerate
+    # per-key with the right chunk count
+    d = LatticeStore.of({
+        k: _mk_sparse_delta([k], sizes[int(k[1:])], seed=7 + i).get(k)
+        for i, k in enumerate(f"k{j}" for j in range(0, len(sizes), 2))})
+    assert resident.ensure(a) is not None
+    got = a.join(d)
+    assert resident.resident_of(got) is not None
+    ref = LatticeStore(a.entries, a.life).join(d, batched=False)
+    _stores_equal(got, ref)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_scatter_ingest_dtype_parity(dtype):
+    a = _mk_store([3, 5, 2], seed=1, dtype=dtype)
+    d = _mk_sparse_delta(["k1"], 5, seed=8, dtype=dtype)
+    assert resident.ensure(a) is not None
+    got = a.join(d)
+    ref = LatticeStore(a.entries, a.life).join(d, batched=False)
+    _stores_equal(got, ref)
+
+
+def test_aligned_resident_join_matches_loop():
+    a = _mk_store([3, 5, 2], seed=2, version=1, n_tensors=2)
+    b = _mk_store([3, 5, 2], seed=3, version=5, n_tensors=2)
+    resident.ensure(a)
+    resident.ensure(b)
+    snap = ops.counters.snapshot()
+    got = a.join(b)
+    d = ops.counters.since(snap)
+    assert d["launches"] == 1 and d["h2d_bytes"] == 0
+    assert resident.resident_of(got) is not None
+    ref = LatticeStore(a.entries, a.life).join(
+        LatticeStore(b.entries, b.life), batched=False)
+    _stores_equal(got, ref)
+
+
+def test_resident_rounds_chain_without_readoption():
+    """Round N's result carries the cache round N+1 ingests into — no
+    re-stack, no re-upload, one launch each round."""
+    s = _mk_store([4, 4, 4], seed=4)
+    resident.ensure(s)
+    for rnd in range(4):
+        d = _mk_sparse_delta(["k1"], 4, seed=20 + rnd, version=10 + rnd)
+        snap = ops.counters.snapshot()
+        s = s.join(d)
+        diff = ops.counters.since(snap)
+        assert diff["launches"] == 1
+        assert resident.resident_of(s) is not None
+    ref = _mk_store([4, 4, 4], seed=4)
+    for rnd in range(4):
+        ref = ref.join(_mk_sparse_delta(["k1"], 4, seed=20 + rnd,
+                                        version=10 + rnd), batched=False)
+    _stores_equal(s, ref)
+
+
+def test_ingest_launches_are_size_independent():
+    """Same delta against a 4x bigger store: identical launch count, and
+    staged bytes bounded by the delta (not the store)."""
+    def round_cost(n_keys):
+        a = _mk_store([4] * n_keys, seed=5)
+        resident.ensure(a)
+        d = _mk_sparse_delta(["k0", "k1"], 4, seed=30)
+        snap = ops.counters.snapshot()
+        a.join(d)
+        return ops.counters.since(snap)
+    small, big = round_cost(8), round_cost(32)
+    assert small["launches"] == big["launches"] == 1
+    delta_bytes = 2 * 2 * (CHUNK * 4 + 4)     # 2 keys × 2 rows: vals+vers
+    pad = 16 * (CHUNK * 4 + 4) + 16 * 4       # padded grid bucket + idx
+    assert big["h2d_bytes"] <= delta_bytes + pad
+    assert big["h2d_bytes"] == small["h2d_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# Digest summaries and energy selection from the maintained columns
+# ---------------------------------------------------------------------------
+
+def test_store_digest_served_from_resident_matches_plain():
+    a = _mk_store([3, 5, 2], seed=6, n_tensors=2)
+    plain = store_digest(LatticeStore(a.entries, a.life))
+    resident.ensure(a)
+    s = a.join(_mk_sparse_delta(["k2"], 2, seed=31))
+    ref = LatticeStore(a.entries, a.life).join(
+        _mk_sparse_delta(["k2"], 2, seed=31), batched=False)
+    assert store_digest(s) == store_digest(ref)
+    assert store_digest(a) == plain           # old snapshot stays valid
+
+
+def test_keep_plan_matches_host_digest_selection():
+    a = _mk_store([6, 6, 6], seed=7, n_tensors=2)
+    host = digest_select_store(LatticeStore(a.entries, a.life),
+                               10 * ROW_BYTES)
+    resident.ensure(a)
+    dev = digest_select_store(a, 10 * ROW_BYTES)
+    _stores_equal(dev, host)
+
+
+def test_keep_plan_none_when_budget_covers_everything():
+    a = _mk_store([2, 2], seed=8)
+    resident.ensure(a)
+    assert digest_select_store(a, 10 ** 9) is a
+
+
+# ---------------------------------------------------------------------------
+# Cache lifecycle: spill, reap, handoff, layout drift
+# ---------------------------------------------------------------------------
+
+def test_spill_roundtrip_restores_host_cache():
+    a = _mk_store([3, 4], seed=9)
+    resident.ensure(a)
+    snap = ops.counters.snapshot()
+    sc = resident.spill(a)
+    assert ops.counters.since(snap)["d2h_bytes"] >= sc.vals.nbytes
+    from repro.core.store import _StackedChunks
+    assert isinstance(sc, _StackedChunks)
+    assert store_digest(a) == store_digest(
+        LatticeStore(a.entries, a.life))
+
+
+def test_tombstoned_key_falls_back_then_readopts():
+    """An epoch bump (reap) breaks the fast-path gate; the join still
+    converges via the general path and the next ensure() re-adopts the
+    post-reap layout."""
+    a = _mk_store([3, 4, 5], seed=10)
+    resident.ensure(a)
+    reaped = LatticeStore(
+        tuple((k, v) for k, v in a.entries if k != "k0"),
+        (("k0", (1, float("-inf"))),))
+    got = a.join(reaped)
+    ref = LatticeStore(a.entries, a.life).join(reaped, batched=False)
+    _stores_equal(got, ref)
+    cache = resident.ensure(got)
+    assert cache is not None
+    assert ("k0", "t0") not in cache.spans
+    assert store_digest(got) == store_digest(ref)
+
+
+def test_handoff_restriction_readopts_remaining_keys():
+    a = _mk_store([3, 4, 5], seed=11)
+    resident.ensure(a)
+    rest = a.restrict(["k1", "k2"])
+    cache = resident.ensure(rest)
+    assert cache is not None
+    assert set(k for k, _, _, _ in cache.layout) == {"k1", "k2"}
+    assert store_digest(rest) == store_digest(
+        LatticeStore(rest.entries, rest.life))
+
+
+def test_layout_drift_new_key_falls_back_to_host_paths():
+    a = _mk_store([3, 4], seed=12)
+    resident.ensure(a)
+    d = _mk_store([2], seed=13, version=7)      # brings key k0 of size 2…
+    d = LatticeStore.of({"brand-new": d.get("k0")})   # …as a NEW key
+    got = a.join(d)
+    ref = LatticeStore(a.entries, a.life).join(d, batched=False)
+    _stores_equal(got, ref)
+    assert resident.ensure(got) is not None     # re-adopt picks it up
+
+
+def test_adopt_densifies_sparse_receiver_state():
+    """A store whose tensors arrived entirely as wire deltas holds
+    SparseChunks — adopt densifies them into the columns."""
+    d = _mk_sparse_delta(["k0", "k1"], 4, seed=14)
+    s = LatticeStore.bottom().join(d)
+    cache = resident.ensure(s)
+    assert cache is not None
+    assert store_digest(s) == store_digest(LatticeStore(s.entries, s.life))
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: in-place patch of the host stacked cache
+# ---------------------------------------------------------------------------
+
+def _stacked(store):
+    sc = store.__dict__.get("_stacked_cache")
+    from repro.core.store import _StackedChunks
+    return sc if isinstance(sc, _StackedChunks) else None
+
+
+def test_patched_stacked_join_matches_loop_and_reuses_untouched():
+    a = _mk_store([4, 4, 4], seed=15)
+    b = _mk_store([4, 4, 4], seed=16, version=3)
+    j = a.join(b)                       # aligned fast join attaches cache
+    assert _stacked(j) is not None
+    d = _mk_sparse_delta(["k1"], 4, seed=32)
+    j2 = j.join(d)
+    ref = LatticeStore(j.entries, j.life).join(d, batched=False)
+    _stores_equal(j2, ref)
+    # untouched keys keep their entry objects (no full rebuild) and the
+    # result carries a patched cache with the identical layout
+    assert _stacked(j2) is not None
+    assert _stacked(j2).layout == _stacked(j).layout
+    e1, e2 = dict(j.entries), dict(j2.entries)
+    assert e2["k0"] is e1["k0"] and e2["k2"] is e1["k2"]
+    assert e2["k1"] is not e1["k1"]
+
+
+def test_patched_stacked_join_rejects_layout_change():
+    a = _mk_store([4, 4], seed=17)
+    b = _mk_store([4, 4], seed=18, version=3)
+    j = a.join(b)
+    assert _stacked(j) is not None
+    d = LatticeStore.of({"kX": _mk_store([2], seed=19).get("k0")})
+    j2 = j.join(d)
+    ref = LatticeStore(j.entries, j.life).join(d, batched=False)
+    _stores_equal(j2, ref)
+
+
+# ---------------------------------------------------------------------------
+# Satellite 2: digest memo on untouched tensors
+# ---------------------------------------------------------------------------
+
+def test_digest_memo_only_recomputes_touched_tensors():
+    a = _mk_store([4, 4, 4, 4], seed=20, n_tensors=2)
+    b = _mk_store([4, 4, 4, 4], seed=21, version=3, n_tensors=2)
+    j = a.join(b)
+    budget = 6 * ROW_BYTES
+    snap = ops.counters.snapshot()
+    digest_select_store(LatticeStore(j.entries, j.life), budget)
+    cold = ops.counters.since(snap)["launches"]
+    assert cold >= 8                    # one digest per tensor, cold
+    digest_select_store(j, budget)      # warm the memo on j's tensors
+    d = _mk_sparse_delta(["k1"], 4, seed=33)
+    j2 = j.join(d)                      # patched: untouched cts reused
+    snap = ops.counters.snapshot()
+    digest_select_store(j2, budget)
+    warm = ops.counters.since(snap)["launches"]
+    assert warm <= 2 + 1                # touched key's tensors + epilogue
+    sel = digest_select_store(j2, budget)
+    ref = digest_select_store(LatticeStore(j2.entries, j2.life), budget)
+    _stores_equal(sel, ref)
+
+
+# ---------------------------------------------------------------------------
+# Wire decode-to-device and resident replicas
+# ---------------------------------------------------------------------------
+
+def test_decode_to_device_ingest_stages_only_the_index_column():
+    from repro.wire.codec import decode_store, encode_store
+    a = _mk_store([4] * 8, seed=22)
+    resident.ensure(a)
+    d = _mk_sparse_delta(["k0", "k5"], 4, seed=34)
+    buf = encode_store(d)
+    ddev = decode_store(buf, to_device=True)
+    assert ddev.__dict__.get("_device_cols") is not None
+    snap = ops.counters.snapshot()
+    got = a.join(ddev)
+    diff = ops.counters.since(snap)
+    assert diff["launches"] == 1
+    assert diff["h2d_bytes"] <= 16 * 4      # padded idx column only
+    ref = LatticeStore(a.entries, a.life).join(decode_store(buf),
+                                               batched=False)
+    _stores_equal(got, ref)
+
+
+def test_resident_replicas_converge_over_device_wire():
+    from repro.core.propagation import StoreReplica
+    from repro.core.sim import NetConfig, Simulator
+    from repro.wire.frames import WireCodec
+
+    def run(resident_mode):
+        wc = WireCodec(to_device=resident_mode)
+        sim = Simulator(NetConfig(loss=0.1, dup=0.1, seed=23))
+        a = sim.add_node(StoreReplica("a", ["b"], causal=False, wire=wc,
+                                      resident=resident_mode))
+        b = sim.add_node(StoreReplica("b", ["a"], causal=False, wire=wc,
+                                      resident=resident_mode))
+        rng = np.random.default_rng(24)
+        for i in range(5):
+            vals = rng.normal(size=(4, CHUNK)).astype(np.float32)
+            vers = ((np.arange(4) + 1 + i) * 2 + 1).astype(np.int32)
+            a.put(f"k{i}", TensorState.of({"w": ChunkedTensor(vals, vers)},
+                                          lamport=1))
+        for _ in range(12):
+            a.on_periodic()
+            b.on_periodic()
+            sim.run_for(2.0)
+        return a, b
+
+    a, b = run(True)
+    assert store_digest(a.store) == store_digest(b.store)
+    assert resident.resident_of(a.store) is not None
+    assert resident.resident_of(b.store) is not None
+    ra, _ = run(False)
+    assert store_digest(a.store) == store_digest(ra.store)

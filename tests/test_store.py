@@ -413,3 +413,30 @@ def test_departed_neighbors_are_pruned_from_bookkeeping():
     assert "c" not in r.A and "c" not in r._known
     assert all(dst != "c" for dst, _ in r._inflight)
     assert "b" in r.A                       # live peer bookkeeping kept
+
+
+# ---------------------------------------------------------------------------
+# Device-resident fast path through the public store API
+# ---------------------------------------------------------------------------
+
+def test_join_prefers_resident_cache_and_matches_loop():
+    from repro.kernels import resident
+    keys = [f"k{i}" for i in range(11)]
+    a = _mk_tensor_store(keys, seed=0, version=1)
+    b = _mk_tensor_store(keys, seed=1, version=2)
+    assert resident.ensure(a) is not None
+    j = a.join(b)
+    assert resident.resident_of(j) is not None
+    _tensors_equal(j, LatticeStore(a.entries, a.life).join(b, batched=False))
+
+
+def test_digest_select_store_resident_matches_host():
+    from repro.core.digest import store_digest
+    from repro.kernels import resident
+    keys = [f"k{i}" for i in range(6)]
+    a = _mk_tensor_store(keys, seed=2, version=1)
+    budget = 9 * (128 * 4 + 12)
+    host = digest_select_store(LatticeStore(a.entries, a.life), budget)
+    resident.ensure(a)
+    dev = digest_select_store(a, budget)
+    assert store_digest(dev) == store_digest(host)
