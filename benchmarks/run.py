@@ -20,6 +20,11 @@ Prints ``name,us_per_call,derived`` CSV:
                             ~baseline after TTL + acked reap, straggler
                             replays never resurrect, read-replica
                             hot-key convergence outside the write set
+  bench_dots                columnar dot-store fast path: 1M-dot causal
+                            join vs the frozenset oracle (>=10x,
+                            bit-identical), per-dot digest reconnect
+                            bytes vs full state (<=5%), add_dots
+                            contiguous-append fast path
   bench_roofline            per-(arch × shape × mesh) roofline rows from
                             the dry-run artifacts (run dryrun first)
 
@@ -69,9 +74,10 @@ def main(argv=None) -> None:
         if not os.path.isdir(out_dir):
             ap.error(f"--json: directory {out_dir} does not exist")
 
-    from . import (bench_antientropy, bench_kernels, bench_lifecycle,
-                   bench_message_complexity, bench_roofline, bench_store,
-                   bench_tensor_sync, bench_wire)
+    from . import (bench_antientropy, bench_dots, bench_kernels,
+                   bench_lifecycle, bench_message_complexity,
+                   bench_roofline, bench_store, bench_tensor_sync,
+                   bench_wire)
 
     modules = [
         ("message_complexity", bench_message_complexity),
@@ -81,6 +87,7 @@ def main(argv=None) -> None:
         ("store", bench_store),
         ("wire", bench_wire),
         ("lifecycle", bench_lifecycle),
+        ("dots", bench_dots),
         ("roofline", bench_roofline),
     ]
     if args.only:

@@ -522,7 +522,7 @@ class ORMap(DeltaCRDT):
 
     def get(self, key: Any, typ=None):
         """View of the embedded CRDT at ``key`` (with the shared context)."""
-        sub = self.store.as_dict().get(key)
+        sub = self.store.get(key, None)
         if sub is None:
             if typ is None:
                 return None
@@ -535,8 +535,12 @@ class ORMap(DeltaCRDT):
         return sub
 
     def get_value(self, key: Any, typ):
-        """Typed read: returns an instance of ``typ`` sharing this map's ctx."""
-        sub = self.store.as_dict().get(key)
+        """Typed read: returns an instance of ``typ`` sharing this map's ctx.
+
+        Uses the store's keyed ``get`` (O(log n) on the columnar
+        representation) rather than materializing ``as_dict`` — per-op
+        delta mutators call this on every write."""
+        sub = self.store.get(key, None)
         inner_store = sub if sub is not None else typ.bottom().store
         return typ(inner_store, self.ctx)
 
@@ -548,7 +552,7 @@ class ORMap(DeltaCRDT):
         return ORMap(DotMap.of({key: sub_delta.store}), sub_delta.ctx)
 
     def rmv_delta(self, i: ReplicaId, key: Any) -> "ORMap":
-        sub = self.store.as_dict().get(key)
+        sub = self.store.get(key, None)
         dots = sub.all_dots() if sub is not None else frozenset()
         return ORMap(DotMap(), CausalContext.from_dots(dots))
 
@@ -578,3 +582,8 @@ class ORMap(DeltaCRDT):
 ALL_CRDT_TYPES = (GCounter, PNCounter, GSet, TwoPSet, AWORSetTombstone,
                   AWORSet, RWORSet, MVRegister, LWWRegister, LWWSet,
                   EWFlag, DWFlag, ORMap)
+
+# Positional wire type-id registry for the dot-column store encoding
+# (wire.codec _KIND_DOTSTORE bodies) and the causal digest section.
+# Append-only: the index IS the on-wire type id.
+CAUSAL_WIRE_TYPES = (AWORSet, RWORSet, MVRegister, EWFlag, DWFlag, ORMap)

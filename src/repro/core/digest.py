@@ -104,11 +104,18 @@ def opaque_hash(value: Any) -> bytes:
 
 @dataclass(eq=False)
 class StoreDigest:
-    """Compact 'what I hold' summary of a store (see module docstring)."""
+    """Compact 'what I hold' summary of a store (see module docstring).
+
+    ``causal`` is the per-dot section: per key holding a causal dot
+    store, a :class:`~repro.core.dotcols.CausalDigest` (vv + cloud
+    summary plus the flat store dot column) — enough for a responder to
+    compute the *exact* missing-dot response instead of re-shipping the
+    value whenever a content hash mismatches."""
 
     tensors: Dict[Tuple[str, str], np.ndarray] = field(default_factory=dict)
     opaque: Dict[str, bytes] = field(default_factory=dict)
     life: Dict[str, Life] = field(default_factory=dict)
+    causal: Dict[str, Any] = field(default_factory=dict)
 
     def epoch_of(self, key: str) -> int:
         return self.life.get(key, LIFE_BOTTOM)[0]
@@ -118,6 +125,7 @@ class StoreDigest:
             return NotImplemented
         return (self.opaque == other.opaque
                 and self.life == other.life
+                and self.causal == other.causal
                 and set(self.tensors) == set(other.tensors)
                 and all(np.array_equal(v, other.tensors[k])
                         for k, v in self.tensors.items()))
@@ -125,7 +133,15 @@ class StoreDigest:
     def __repr__(self) -> str:
         return (f"StoreDigest({len(self.tensors)} tensor cols, "
                 f"{len(self.opaque)} opaque keys, "
+                f"{len(self.causal)} causal keys, "
                 f"{len(self.life)} life keys)")
+
+
+def _causal_wire_types():
+    """The causal CRDT classes that digest per-dot (lazy import — crdts
+    is a leaf module, but keep the import out of module load order)."""
+    from .crdts import CAUSAL_WIRE_TYPES
+    return CAUSAL_WIRE_TYPES
 
 
 def store_digest(store: LatticeStore) -> StoreDigest:
@@ -156,6 +172,13 @@ def store_digest(store: LatticeStore) -> StoreDigest:
                     out.tensors[(key, name)] = vers_col[span[0]:span[1]]
                 else:
                     out.tensors[(key, name)] = dense_versions(ct)
+        elif isinstance(val, _causal_wire_types()):
+            from . import dotcols
+            g = dotcols.causal_digest_of(val)
+            if g is not None:
+                out.causal[key] = g
+            else:                     # nested-map shape: hash like opaque
+                out.opaque[key] = opaque_hash(val)
         else:
             out.opaque[key] = opaque_hash(val)
     out.life.update(store.life)
@@ -195,6 +218,58 @@ def versions_at(known: np.ndarray, idx: np.ndarray,
     return at
 
 
+def _causal_diff_obj(value, g):
+    """Set-based reference implementation of the per-dot digest response
+    (:func:`~repro.core.dotcols.causal_diff_cols` is the columnar twin
+    the wire encoder uses; property tests hold the two equal). Computes
+
+        s_ship = {d ∈ s_resp | d ∉ c_req}
+        c_ship = {d ∈ g.dots | d ∈ c_resp, d ∉ s_resp} ∪ (c_resp \\ c_req)
+
+    directly with Python sets over the object representation. Joining
+    ``(s_ship, c_ship)`` at the requester reproduces the join of the
+    responder's full state exactly (DESIGN.md §9), and ``s_ship`` never
+    carries a dot the requester's context contains. Returns None when
+    the requester lacks nothing."""
+    from . import dotcols
+    from .dots import DotFun, DotMap, DotSet
+
+    val = dotcols.value_to_obj(value)
+    store, ctx = val.store, val.ctx
+    gvv = {g.rids[j]: int(n) for j, n in enumerate(g.vvcol) if n}
+    gcloud = dotcols._unpack(g.rids, g.cloudcol)
+    gdots = dotcols._unpack(g.rids, g.dotcol)
+
+    def req_has(d):
+        return d[1] <= gvv.get(d[0], 0) or d in gcloud
+
+    s_all = store.all_dots()
+    new = {d for d in s_all if not req_has(d)}
+    removed = {d for d in gdots if ctx.contains(d) and d not in s_all}
+    extras = set()
+    for i, n in ctx.vv:
+        for k in range(gvv.get(i, 0) + 1, n + 1):
+            if (i, k) not in gcloud:
+                extras.add((i, k))
+    for d in ctx.cloud:
+        if not req_has(d):
+            extras.add(d)
+    cship = removed | extras
+    if not new and not cship:
+        return None
+
+    def filt(s):
+        if isinstance(s, DotSet):
+            return DotSet(frozenset(s.dots & new))
+        if isinstance(s, DotFun):
+            return DotFun(tuple((d, v) for d, v in s.entries if d in new))
+        return DotMap(tuple((k, f) for k, sub in s.entries
+                            if not (f := filt(sub)).is_bottom()))
+
+    from .dots import CausalContext
+    return type(val)(filt(store), CausalContext.from_dots(cship))
+
+
 def digest_diff(store: LatticeStore, digest: StoreDigest) -> LatticeStore:
     """The sub-delta of ``store`` that ``digest``'s owner provably lacks:
     per tensor, only the chunk rows whose version strictly exceeds the
@@ -218,6 +293,15 @@ def digest_diff(store: LatticeStore, digest: StoreDigest) -> LatticeStore:
             continue                 # requester's incarnation dominates
         same_epoch = q_epoch == epoch
         if ts_cls is None or not isinstance(val, ts_cls):
+            if isinstance(val, _causal_wire_types()):
+                g = digest.causal.get(key) if same_epoch else None
+                if g is None:
+                    out[key] = val        # requester lacks the key: whole
+                else:
+                    d = _causal_diff_obj(val, g)
+                    if d is not None:
+                        out[key] = d      # exact missing-dot sub-delta
+                continue
             h = digest.opaque.get(key) if same_epoch else None
             if h is None or h != opaque_hash(val):
                 out[key] = val

@@ -32,6 +32,10 @@ from typing import Any, Callable, Dict, FrozenSet, Iterable, Mapping, Optional, 
 ReplicaId = str
 Dot = Tuple[ReplicaId, int]  # (replica id, 1-based counter)
 
+# guard for CausalContext.dots(): materializing is O(total events), so
+# it is reserved for tests/debug on small contexts (see its docstring)
+_DOTS_MATERIALIZE_LIMIT = 1 << 16
+
 
 def _freeze_vv(vv: Mapping[ReplicaId, int]) -> Tuple[Tuple[ReplicaId, int], ...]:
     return tuple(sorted((i, n) for i, n in vv.items() if n > 0))
@@ -87,7 +91,16 @@ class CausalContext:
         return (i, self.max_for(i) + 1)
 
     def dots(self) -> FrozenSet[Dot]:
-        """Explicit dot set (test/debug only — this is what compression avoids)."""
+        """Explicit dot set — **test/debug only**. Materializing every
+        covered dot is O(total events) and is exactly what the §7.2
+        compression exists to avoid; no engine path may call this
+        (audited: only tests do). Bulk consumers should iterate ``vv``
+        and ``cloud``, or use :mod:`repro.core.dotcols` columns."""
+        total = sum(n for _, n in self.vv) + len(self.cloud)
+        assert total <= _DOTS_MATERIALIZE_LIMIT, (
+            f"CausalContext.dots() would materialize {total} dots "
+            f"(> {_DOTS_MATERIALIZE_LIMIT}); it is a test/debug helper — "
+            "iterate vv/cloud or use repro.core.dotcols for bulk work")
         out = set(self.cloud)
         for i, n in self.vv:
             out.update((i, k) for k in range(1, n + 1))
@@ -98,9 +111,28 @@ class CausalContext:
         return self.add_dots((dot,))
 
     def add_dots(self, dots: Iterable[Dot]) -> "CausalContext":
+        ds = dots if isinstance(dots, (tuple, list)) else tuple(dots)
+        if not ds:
+            return self
+        # Contiguous-append fast path: per-op δ-mutators add exactly the
+        # next dot per replica, so the common case extends vv prefixes
+        # in place — no dict+set copy of the cloud and no per-replica
+        # re-sort in _normalize. Only safe when the cloud holds nothing
+        # for the touched replicas (an extension could absorb it).
+        touched = {i for i, _ in ds}
+        if not any(i in touched for i, _ in self.cloud):
+            vv = dict(self.vv)
+            for i, n in ds:
+                cur = vv.get(i, 0)
+                if n == cur + 1:
+                    vv[i] = n
+                elif n > cur:
+                    break              # gap above the prefix: cloud path
+            else:
+                return CausalContext(vv=_freeze_vv(vv), cloud=self.cloud)
         vv = dict(self.vv)
         cloud = set(self.cloud)
-        for d in dots:
+        for d in ds:
             i, n = d
             if n > vv.get(i, 0):
                 cloud.add(d)
@@ -115,7 +147,18 @@ class CausalContext:
         return _normalize(vv, cloud)
 
     def leq(self, other: "CausalContext") -> bool:
-        return other.join(self) == other
+        """Direct dominance check, equivalent to the lattice definition
+        ``other.join(self) == other`` but without allocating and
+        re-normalizing a joined context per comparison. Relies on the
+        normalization invariant: ``other``'s cloud never holds the dot
+        that would extend a vv prefix, so a prefix of ``self`` that
+        exceeds ``other``'s vv cannot be covered by ``other``'s cloud."""
+        ovv = dict(other.vv)
+        if any(n > ovv.get(i, 0) for i, n in self.vv):
+            return False
+        oc = other.cloud
+        return all(k <= ovv.get(i, 0) or (i, k) in oc
+                   for i, k in self.cloud)
 
     def __le__(self, other: "CausalContext") -> bool:  # pragma: no cover
         return self.leq(other)
@@ -262,5 +305,16 @@ class DotMap:
 
 
 def causal_join(store_a, ctx_a: CausalContext, store_b, ctx_b: CausalContext):
-    """Join two causal states ((store, ctx) pairs); returns (store, ctx)."""
+    """Join two causal states ((store, ctx) pairs); returns (store, ctx).
+
+    Dispatch point for the dual representation: when either side is
+    columnar (:mod:`repro.core.dotcols`), the join runs vectorized and
+    the result stays columnar; pure-object joins keep the paper-shaped
+    path below, which doubles as the oracle the columnar path is
+    property-tested against.
+    """
+    if (getattr(store_a, "columnar", False)
+            or getattr(store_b, "columnar", False)):
+        from . import dotcols
+        return dotcols.causal_join_cols(store_a, ctx_a, store_b, ctx_b)
     return store_a.causal_join(ctx_a, store_b, ctx_b), ctx_a.join(ctx_b)

@@ -40,7 +40,11 @@ MAGIC = b"\xd4W"
 # v2: store bodies carry a key-lifecycle table (epoch, expiry per key —
 # repro.lifecycle) and a per-group column-compression flag; digest bodies
 # carry a life section; reap/reap-ack control frames added.
-VERSION = 2
+# v3: causal dot-store lattices ride as dot-column bodies (rid table +
+# vv/cloud columns + packed dot column) instead of opaque pickle, and
+# digest bodies carry a per-dot causal section (vv + cloud + store dot
+# column per key), enabling exact missing-dot pull responses.
+VERSION = 3
 
 _HEADER = struct.Struct("<2sBBII")
 HEADER_SIZE = _HEADER.size
@@ -202,6 +206,7 @@ class WireCodec:
             body = encode_store(store, known_versions=digest.tensors,
                                 known_opaque=digest.opaque,
                                 known_life=digest.life,
+                                known_causal=digest.causal,
                                 compress=self.compress)
             if store_body_is_empty(body):
                 return None

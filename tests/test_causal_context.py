@@ -87,3 +87,15 @@ def test_representation_canonical_for_equality():
     reference = CausalContext.from_dots(dots)
     for perm in itertools.permutations(dots):
         assert CausalContext.from_dots(perm) == reference
+
+
+@settings(max_examples=150, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_leq_is_the_lattice_order(seed):
+    """The direct dominance check must equal the definitional partial
+    order x ⊑ y ⇔ x ⊔ y = y, on arbitrary vv/cloud splits."""
+    rng = random.Random(seed)
+    a = CausalContext.from_dots(_random_dots(rng, rng.randint(0, 20)))
+    b = CausalContext.from_dots(_random_dots(rng, rng.randint(0, 20)))
+    for x, y in [(a, b), (b, a), (a, a.join(b)), (a.join(b), a)]:
+        assert x.leq(y) == (y.join(x) == y), (x, y)

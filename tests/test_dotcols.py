@@ -1,0 +1,351 @@
+"""Columnar dot-store fast path (repro.core.dotcols) vs the object oracle.
+
+The columnar representation must be *bit-identical in meaning* to the
+frozenset/dataclass path in :mod:`repro.core.dots`: every driver here
+builds causally-consistent replica states (each replica mints only its
+own rid on its own state — dots are globally unique 𝕀 × ℕ tags, the
+invariant the flat-membership join relies on), then checks
+
+* causal_join_cols ≡ the paper-shaped object join (and the mixed-
+  representation dispatch in ``dots.causal_join``),
+* the dot-column wire encoding round-trips (plain and compressed),
+* the per-dot digest exchange is join-equivalent to full-state
+  shipping and never ships a dot the requester's context contains,
+* the jitted containment kernel agrees with the numpy path.
+
+Drivers are plain functions over a seed so the hypothesis suite
+(test_dotcols_properties) can wrap the exact same bodies; the seeds
+pinned here keep the properties exercised when hypothesis is absent.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import dotcols as dc
+from repro.core.crdts import AWORSet, EWFlag, MVRegister, ORMap, RWORSet
+from repro.core.digest import digest_diff, store_digest
+from repro.core.dots import (CausalContext, DotFun, DotMap, DotSet,
+                             _DOTS_MATERIALIZE_LIMIT, _normalize,
+                             causal_join)
+from repro.core.store import LatticeStore
+from repro.wire.codec import (decode_digest, decode_store, encode_digest,
+                              encode_store, store_body_is_empty)
+
+SEEDS = list(range(12))
+
+
+# ---------------------------------------------------------------------------
+# Causally-consistent state generation (the property domain)
+# ---------------------------------------------------------------------------
+
+def _mut_set(v, rid, rng):
+    if rng.random() < 0.72 or not v.elements():
+        return v.join(v.add_delta(rid, rng.randrange(20)))
+    return v.join(v.rmv_delta(rid, rng.choice(sorted(v.elements()))))
+
+
+def _mut_map(m, rid, rng):
+    k = "k%d" % rng.randrange(8)
+    roll = rng.random()
+    if roll < 0.45:
+        return m.join(m.apply_delta(rid, k, AWORSet, "add_delta",
+                                    rng.randrange(9)))
+    if roll < 0.8:
+        return m.join(m.apply_delta(rid, k, MVRegister, "write_delta",
+                                    rng.randrange(9)))
+    return m.join(m.rmv_delta(rid, k))
+
+
+def _mut_flag(f, rid, rng):
+    return f.join(f.enable_delta(rid) if rng.random() < 0.6
+                  else f.disable_delta(rid))
+
+
+_SYSTEMS = [(AWORSet, _mut_set), (ORMap, _mut_map), (EWFlag, _mut_flag)]
+
+
+def replica_states(cls, mutate, n_reps, n_steps, rng):
+    """Divergent replicas of ONE system: replica ``i`` mints only rid
+    ``i`` on its own state (so every dot is globally unique — its own
+    context always covers its own past mints), with random pairwise
+    joins standing in for anti-entropy."""
+    states = [cls.bottom() for _ in range(n_reps)]
+    for _ in range(n_steps):
+        i = rng.randrange(n_reps)
+        if rng.random() < 0.7:
+            states[i] = mutate(states[i], "r%d" % i, rng)
+        else:
+            states[i] = states[i].join(states[rng.randrange(n_reps)])
+    return states
+
+
+def _divergent_pair(seed):
+    rng = random.Random(seed)
+    cls, mutate = _SYSTEMS[seed % len(_SYSTEMS)]
+    states = replica_states(cls, mutate, 4, rng.randrange(2, 60), rng)
+    x, y = rng.sample(states, 2)
+    return x, y
+
+
+def _to_cols(v):
+    return type(v)(dc.store_to_cols(v.store), dc.ctx_to_cols(v.ctx))
+
+
+# ---------------------------------------------------------------------------
+# Drivers (shared with test_dotcols_properties)
+# ---------------------------------------------------------------------------
+
+def check_join_equivalence(seed):
+    """Columnar join ≡ object join, for every pairing of representations."""
+    x, y = _divergent_pair(seed)
+    so, co = causal_join(x.store, x.ctx, y.store, y.ctx)
+    xs, xc = dc.store_to_cols(x.store), dc.ctx_to_cols(x.ctx)
+    ys, yc = dc.store_to_cols(y.store), dc.ctx_to_cols(y.ctx)
+    sc, cc = dc.causal_join_cols(xs, xc, ys, yc)
+    assert sc.to_obj() == so and cc.to_obj() == co
+    assert sc == so and cc == co            # cross-representation __eq__
+    # dispatch through dots.causal_join, mixed representations both ways
+    for sa, ca, sb, cb in [(xs, xc, y.store, y.ctx),
+                           (x.store, x.ctx, ys, yc)]:
+        sm, cm = causal_join(sa, ca, sb, cb)
+        assert sm == so and cm == co
+    # CRDT-level joins agree regardless of representation
+    assert _to_cols(x).join(y) == x.join(y)
+
+
+def check_wire_roundtrip(seed):
+    """decode(encode(store)) == store, and causal values come back
+    columnar (plain and zlib-compressed bodies)."""
+    x, _ = _divergent_pair(seed)
+    st = LatticeStore.of({"v": x})
+    for compress in (False, True):
+        out = decode_store(encode_store(st, compress=compress))
+        assert out == st
+        got = out.as_dict()["v"]
+        assert got == x and type(got) is type(x)
+        assert dc.is_columnar(got.store) and dc.is_columnar(got.ctx)
+
+
+def check_digest_sync(seed):
+    """Per-dot digest exchange ships a join-equivalent sub-delta and
+    never a dot the requester's context contains (Def. 6: the response
+    joined at the requester equals joining the responder's full state)."""
+    x, y = _divergent_pair(seed)
+    so, co = causal_join(x.store, x.ctx, y.store, y.ctx)
+    full = type(x)(so, co)
+    dg = store_digest(LatticeStore.of({"v": x}))
+    dg = decode_digest(encode_digest(dg))          # over the wire
+    assert "v" in dg.causal
+    body = encode_store(LatticeStore.of({"v": full}), known_causal=dg.causal)
+    if store_body_is_empty(body):
+        got = x                                    # requester lacked nothing
+    else:
+        ship = decode_store(body).as_dict()["v"]
+        for d in ship.store.all_dots():
+            assert not x.ctx.contains(d), \
+                f"response shipped dot {d} the requester already saw"
+        got = x.join(ship)
+    assert got == full
+    # the object-path responder (digest_diff) is the oracle of the same
+    # exchange — both must land the requester on the identical state
+    dif = dict(digest_diff(LatticeStore.of({"v": full}), dg).entries)
+    got_obj = x.join(dif["v"]) if "v" in dif else x
+    assert got_obj == full
+
+
+def check_missing_mask_parity(seed):
+    """The jitted containment kernel == the numpy sorted-merge path."""
+    rng = random.Random(seed)
+    rids = ("a", "b", "c")
+    vv = np.array([rng.randrange(0, 10) for _ in rids], np.int64)
+    cloud = np.array(sorted({dc.pack_dot(rids, (rng.choice(rids),
+                                                rng.randrange(1, 20)))
+                             for _ in range(rng.randrange(0, 6))}), np.int64)
+    dots_q = np.array(sorted({dc.pack_dot(rids, (rng.choice(rids),
+                                                 rng.randrange(1, 20)))
+                              for _ in range(rng.randrange(1, 30))}), np.int64)
+    m_np = dc.missing_mask(vv, cloud, dots_q, backend="numpy")
+    m_jx = dc.missing_mask(vv, cloud, dots_q, backend="jax")
+    assert np.array_equal(m_np, np.asarray(m_jx))
+    # ... and both agree with the object-model contains()
+    cc = dc.CausalContextCols(tuple(rids), vv, cloud).to_obj()
+    for packed, miss in zip(dots_q.tolist(), m_np.tolist()):
+        d = (rids[packed >> dc.SEQ_BITS], packed & dc.SEQ_MASK)
+        assert miss == (not cc.contains(d))
+
+
+def check_context_parity(seed):
+    """CausalContextCols mirrors CausalContext query-for-query."""
+    rng = random.Random(seed)
+    rids = ["a", "b", "c"]
+    dots = [(rng.choice(rids), rng.randint(1, 12))
+            for _ in range(rng.randint(0, 25))]
+    cc = CausalContext.from_dots(dots)
+    cv = dc.ctx_to_cols(cc)
+    assert cv.to_obj() == cc and cv == cc and cc == cv
+    assert hash(cv) == hash(cc)
+    for i in rids + ["z"]:
+        assert cv.max_for(i) == cc.max_for(i)
+        assert cv.next_dot(i) == cc.next_dot(i)
+        for k in range(1, 15):
+            assert cv.contains((i, k)) == cc.contains((i, k))
+    other = CausalContext.from_dots(
+        [(rng.choice(rids), rng.randint(1, 12))
+         for _ in range(rng.randint(0, 25))])
+    ov = dc.ctx_to_cols(other)
+    assert cv.join(ov).to_obj() == cc.join(other)
+    assert cv.leq(ov) == cc.leq(other)
+    assert ov.leq(cv) == other.leq(cc)
+
+
+def check_add_dots_fast_path(seed):
+    """The contiguous-append fast path in add_dots is indistinguishable
+    from the generic normalize path."""
+    rng = random.Random(seed)
+    rids = ["a", "b", "c"]
+    base = CausalContext.from_dots(
+        [(rng.choice(rids), rng.randint(1, 8))
+         for _ in range(rng.randint(0, 15))])
+    batch = []
+    probe = dict(base.vv)
+    for _ in range(rng.randint(1, 10)):
+        i = rng.choice(rids)
+        if rng.random() < 0.7:                 # contiguous extension
+            probe[i] = probe.get(i, 0) + 1
+            batch.append((i, probe[i]))
+        else:                                  # arbitrary (may gap)
+            batch.append((i, rng.randint(1, 14)))
+    got = base.add_dots(batch)
+    vv = dict(base.vv)
+    cloud = set(base.cloud)
+    for d in batch:
+        if d[1] > vv.get(d[0], 0):
+            cloud.add(d)
+    assert got == _normalize(vv, cloud)
+
+
+# ---------------------------------------------------------------------------
+# Seed-pinned instantiations (pass with or without hypothesis installed)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_join_equivalence(seed):
+    check_join_equivalence(seed)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_wire_roundtrip(seed):
+    check_wire_roundtrip(seed)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_digest_sync(seed):
+    check_digest_sync(seed)
+
+
+@pytest.mark.parametrize("seed", SEEDS[:6])
+def test_missing_mask_parity(seed):
+    check_missing_mask_parity(seed)
+
+
+@pytest.mark.parametrize("seed", SEEDS[:6])
+def test_context_parity(seed):
+    check_context_parity(seed)
+
+
+@pytest.mark.parametrize("seed", SEEDS[:6])
+def test_add_dots_fast_path(seed):
+    check_add_dots_fast_path(seed)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic unit checks
+# ---------------------------------------------------------------------------
+
+def test_leq_matches_lattice_definition():
+    """leq must equal the definitional order other.join(self) == other —
+    including across vv/cloud splits of the same dot set."""
+    cases = [
+        CausalContext.bottom(),
+        CausalContext.from_dots([("a", 1)]),
+        CausalContext.from_dots([("a", 1), ("a", 2), ("b", 1)]),
+        CausalContext.from_dots([("a", 1), ("a", 3)]),          # cloud gap
+        CausalContext.from_dots([("a", 3), ("b", 5)]),          # pure cloud
+        CausalContext.from_dots([("a", 1), ("a", 2), ("a", 4), ("b", 2)]),
+    ]
+    for s in cases:
+        for o in cases:
+            assert s.leq(o) == (o.join(s) == o), (s, o)
+
+
+def test_dots_materialize_guard():
+    """dots() is a test/debug helper: materializing a huge context must
+    trip the guard instead of silently allocating O(history)."""
+    big = CausalContext(vv=(("r0", _DOTS_MATERIALIZE_LIMIT + 1),))
+    with pytest.raises(AssertionError, match="test/debug"):
+        big.dots()
+    # small contexts still materialize fine
+    assert CausalContext.from_dots([("a", 1), ("a", 2)]).dots() == \
+        frozenset([("a", 1), ("a", 2)])
+
+
+def test_normalize_cols_matches_object_normalize():
+    rng = random.Random(5)
+    rids = ("a", "b", "c")
+    for _ in range(30):
+        vv_map = {i: rng.randrange(0, 6) for i in rids}
+        cloud = {(rng.choice(rids), rng.randrange(1, 15))
+                 for _ in range(rng.randrange(0, 10))}
+        oracle = _normalize(dict(vv_map), set(cloud))
+        vvcol = np.array([vv_map[i] for i in rids], np.int64)
+        packed = np.array([dc.pack_dot(rids, d) for d in sorted(cloud)],
+                          np.int64)
+        nvv, ncloud = dc._normalize_cols(vvcol, packed)
+        got = dc.CausalContextCols(rids, nvv, ncloud).to_obj()
+        assert got == oracle
+
+
+def test_digest_wire_roundtrip_causal_section():
+    v = AWORSet.bottom()
+    for e in ("x", "y"):
+        v = v.join(v.add_delta("r1", e))
+    v = v.join(v.rmv_delta("r1", "x"))
+    dg = store_digest(LatticeStore.of({"v": v}))
+    out = decode_digest(encode_digest(dg))
+    assert out == dg
+    g = out.causal["v"]
+    # the per-dot section carries the store's live dots exactly
+    assert set(g.dotcol.tolist()) == \
+        {dc.pack_dot(g.rids, d) for d in v.store.all_dots()}
+
+
+def test_ormap_columnar_keyed_access():
+    m = ORMap.bottom()
+    m = m.join(m.apply_delta("r1", "k1", AWORSet, "add_delta", 1))
+    m = m.join(m.apply_delta("r1", "k2", MVRegister, "write_delta", 7))
+    mv = _to_cols(m)
+    assert mv == m
+    assert mv.get_value("k2", MVRegister) == m.get_value("k2", MVRegister)
+    assert mv.get_value("zz", AWORSet) == m.get_value("zz", AWORSet)
+    # mutating through the columnar map lands on the same state
+    assert mv.join(mv.apply_delta("r2", "k1", AWORSet, "add_delta", 2)) \
+        == m.join(m.apply_delta("r2", "k1", AWORSet, "add_delta", 2))
+
+
+def test_nested_ormap_stays_on_object_path():
+    """Nested DotMap shapes are outside the columnar model: conversion
+    declines (returns None) and every layer falls back to objects."""
+    inner = ORMap.bottom()
+    inner = inner.join(inner.apply_delta("r1", "i", AWORSet,
+                                         "add_delta", 1))
+    outer = ORMap.bottom().join(
+        ORMap(DotMap.of({"o": inner.store}), inner.ctx))
+    assert dc.store_to_cols(outer.store) is None
+    assert dc.value_to_cols(outer) is None
+    # digest/wire still handle it (opaque fallback), round-tripping exactly
+    st = LatticeStore.of({"nested": outer})
+    assert decode_store(encode_store(st)) == st
+    dg = store_digest(st)
+    assert "nested" in dg.opaque and "nested" not in dg.causal

@@ -1,0 +1,56 @@
+"""Property-test sweep over the columnar dot-store drivers.
+
+Wraps the seed-driven drivers from :mod:`tests.test_dotcols` in
+hypothesis, so the columnar/object equivalence, wire round-trip, and
+per-dot digest properties are searched over a much wider seed space
+than the pinned parametrizations. The driver bodies are identical —
+anything hypothesis finds here is reproducible by adding the failing
+seed to ``test_dotcols.SEEDS``.
+"""
+
+import pytest as _pytest
+_pytest.importorskip(
+    "hypothesis", reason="dev dependency — pip install -r requirements-dev.txt")
+from hypothesis import given, settings, strategies as st
+
+from test_dotcols import (check_add_dots_fast_path, check_context_parity,
+                          check_digest_sync, check_join_equivalence,
+                          check_missing_mask_parity, check_wire_roundtrip)
+
+_seed = st.integers(0, 2**32 - 1)
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=_seed)
+def test_join_equivalence_property(seed):
+    check_join_equivalence(seed)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=_seed)
+def test_wire_roundtrip_property(seed):
+    check_wire_roundtrip(seed)
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=_seed)
+def test_digest_sync_property(seed):
+    check_digest_sync(seed)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=_seed)
+def test_missing_mask_parity_property(seed):
+    check_missing_mask_parity(seed)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=_seed)
+def test_context_parity_property(seed):
+    check_context_parity(seed)
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=_seed)
+def test_add_dots_fast_path_property(seed):
+    check_add_dots_fast_path(seed)

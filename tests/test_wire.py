@@ -154,8 +154,10 @@ def test_digest_roundtrip():
     for (key, name), vers in dig.tensors.items():
         assert np.array_equal(
             vers, np.asarray(ts.as_dict()[name].versions))
-    # every non-tensor key is summarized by its content hash
-    assert set(dig.opaque) == {"counter", "set", "reg"}
+    # non-tensor keys: causal dot-store types carry per-dot causal
+    # summaries (vv + cloud + store dot column), the rest content hashes
+    assert set(dig.opaque) == {"counter"}
+    assert set(dig.causal) == {"set", "reg"}
     assert dig.opaque["counter"] == opaque_hash(store.get("counter"))
 
 
