@@ -25,6 +25,11 @@ Prints ``name,us_per_call,derived`` CSV:
                             bit-identical), per-dot digest reconnect
                             bytes vs full state (<=5%), add_dots
                             contiguous-append fast path
+  bench_net                 real loopback sockets: UDP load generator
+                            (throughput + p50/p99 convergence latency
+                            under 10% loss), TCP kill/restart digest-sync
+                            catch-up (<=25% of full state), 3-process
+                            serve.py cluster fingerprint agreement
   bench_roofline            per-(arch × shape × mesh) roofline rows from
                             the dry-run artifacts (run dryrun first)
 
@@ -75,7 +80,7 @@ def main(argv=None) -> None:
             ap.error(f"--json: directory {out_dir} does not exist")
 
     from . import (bench_antientropy, bench_dots, bench_kernels,
-                   bench_lifecycle, bench_message_complexity,
+                   bench_lifecycle, bench_message_complexity, bench_net,
                    bench_roofline, bench_store, bench_tensor_sync,
                    bench_wire)
 
@@ -88,6 +93,7 @@ def main(argv=None) -> None:
         ("wire", bench_wire),
         ("lifecycle", bench_lifecycle),
         ("dots", bench_dots),
+        ("net", bench_net),
         ("roofline", bench_roofline),
     ]
     if args.only:

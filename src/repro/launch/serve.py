@@ -22,7 +22,18 @@ gateways, with rendezvous-hashed key ownership (``KeyOwnership`` +
 owns or replicates — bytes per anti-entropy round scale with a gateway's
 shard, not with the whole fleet's session count. Any gateway accepts any
 request (writes for non-owned keys forward to the owners through the
-same gossip)."""
+same gossip).
+
+``--listen HOST:PORT --peers a,b,c`` leaves the simulator entirely: this
+process becomes ONE member of a real gossip cluster (``repro.net``),
+shipping the same δ-wire frames over actual UDP or TCP sockets. Each
+process writes its share of the ``--sessions`` keys and gossips under
+``--ship-policy`` until the cluster converges; ``--status-file`` publishes
+a JSON heartbeat (semantic session fingerprint + byte counters) so an
+external harness — the ``net`` benchmark suite, the CI ``net-smoke``
+job — can assert cross-process convergence without any coordinator.
+Socket mode requires the wire codec (``--no-wire`` is rejected) and
+members may be named ``id@host:port`` to keep replica ids logical."""
 
 from __future__ import annotations
 
@@ -79,8 +90,42 @@ def main() -> None:
                     help="gossip Python objects instead of binary δ-wire "
                          "frames (frames are the default: gateways move "
                          "bytes, and reported traffic is measured frame "
-                         "lengths)")
+                         "lengths; incompatible with socket mode)")
+    ap.add_argument("--listen", metavar="[ID@]HOST:PORT", default=None,
+                    help="socket mode: gossip over real sockets as one "
+                         "member of an OS-process cluster (repro.net); "
+                         "requires --peers")
+    ap.add_argument("--peers", metavar="[ID@]H:P,...", default=None,
+                    help="socket mode: the other cluster members")
+    ap.add_argument("--transport", default="udp", choices=("udp", "tcp"),
+                    help="socket-mode channel (UDP datagrams with "
+                         "MTU splitting/batching, or TCP streams with "
+                         "reconnect)")
+    ap.add_argument("--udp-loss", type=float, default=0.0,
+                    help="socket mode, UDP only: injected datagram loss "
+                         "probability on the send path (reproducible "
+                         "lossy-mesh runs over loopback)")
+    ap.add_argument("--tick", type=float, default=0.1,
+                    help="socket-mode anti-entropy period, seconds")
+    ap.add_argument("--run-for", type=float, default=45.0,
+                    help="socket mode: exit after this many seconds")
+    ap.add_argument("--status-file", default=None,
+                    help="socket mode: publish a JSON heartbeat "
+                         "(fingerprint, key count, byte counters) here "
+                         "for the external convergence harness")
     args = ap.parse_args()
+
+    if args.listen or args.peers:
+        from repro.net import validate_net_args
+        try:
+            spec = validate_net_args(
+                args.listen, args.peers, transport=args.transport,
+                wire=args.wire, udp_loss=args.udp_loss,
+                session_ttl=args.session_ttl)
+        except ValueError as e:
+            ap.error(str(e))
+        _socket_sessions(args, spec)
+        return
 
     cfg = get_config(args.arch, reduced=True)
     params, _ = init_model(cfg, jax.random.PRNGKey(args.seed))
@@ -280,6 +325,91 @@ def _keyed_sessions(args) -> None:
               f"sessions expired and were reaped by their owners' ack "
               f"quorum; tombstones per gateway: {reaped}, resident "
               f"values left: {resident}")
+
+
+def _session_fingerprint(replica, keys) -> str:
+    """Semantic fingerprint of the session table: blake2b over the sorted
+    ``(key, sorted read set)`` pairs. Representation-blind on purpose —
+    a locally-written MVRegister and its wire-decoded columnar twin are
+    semantically equal but structurally different objects, so hashing
+    the *read values* is what lets N processes agree they converged."""
+    import hashlib
+    acc = hashlib.blake2b(digest_size=16)
+    for key in sorted(keys):
+        val = replica.get(key, MVRegister)
+        reads = sorted(repr(v) for v in val.read()) if val is not None \
+            else []
+        acc.update(repr((key, reads)).encode("utf-8"))
+    return acc.hexdigest()
+
+
+def _socket_sessions(args, spec) -> None:
+    """One member of a real socket gossip cluster (``repro.net``): write
+    this process's share of the session keys, gossip frames until the
+    run window closes, publish convergence heartbeats."""
+    import asyncio
+
+    async def run() -> None:
+        from repro.net import GossipNode
+
+        n_sessions = args.sessions if args.sessions else 12
+        node = GossipNode(spec.node_id, spec.listen,
+                          transport=spec.transport, peers=spec.peers,
+                          policy=args.ship_policy, tick=args.tick,
+                          loss=args.udp_loss, seed=args.seed)
+        await node.start()
+        ids = spec.cluster_ids
+        rank, n = ids.index(spec.node_id), len(ids)
+        mine = [s for s in range(n_sessions) if s % n == rank]
+        print(f"[serve.net] {spec.node_id} listening on {node.addr} "
+              f"({spec.transport}, policy={args.ship_policy}, "
+              f"{len(spec.peers)} peers, udp_loss={args.udp_loss}); "
+              f"writing {len(mine)}/{n_sessions} sessions")
+        for s in mine:
+            for status in ("queued", "prefilling", "decoding", "done"):
+                node.update(f"sess{s}", MVRegister, "write_delta",
+                            node.id, status)
+            await asyncio.sleep(args.tick / 4)   # interleave with gossip
+        keys = [f"sess{s}" for s in range(n_sessions)]
+        deadline = node.time + args.run_for
+        while node.time < deadline:
+            node.check_healthy()
+            if args.status_file:
+                _write_status(args.status_file, node, keys, n_sessions)
+            await asyncio.sleep(min(0.25, args.tick))
+        if args.status_file:
+            _write_status(args.status_file, node, keys, n_sessions)
+        print(f"[serve.net] {spec.node_id} done: "
+              f"{len(node.X.keys())}/{n_sessions} keys resident, "
+              f"frame_bytes_by_kind={node.stats.bytes_by_kind}, "
+              f"{node.stats.summary()}")
+        await node.stop()
+
+    asyncio.run(run())
+
+
+def _write_status(path: str, node, keys, n_sessions: int) -> None:
+    """Atomic heartbeat write (tmp + rename) so the harness never reads
+    a torn JSON."""
+    import json
+    import os
+    resident = node.X.keys()
+    done = all(k in resident and node.replica.get(k, MVRegister) is not None
+               and node.replica.get(k, MVRegister).read()
+               == frozenset({"done"}) for k in keys)
+    payload = {
+        "id": node.id,
+        "keys": len(resident),
+        "expect": n_sessions,
+        "all_done": done,
+        "fingerprint": _session_fingerprint(node.replica, keys),
+        "bytes_by_kind": node.stats.bytes_by_kind,
+        "stats": node.stats.summary(),
+    }
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f)
+    os.replace(tmp, path)
 
 
 if __name__ == "__main__":

@@ -24,15 +24,15 @@ message, so every benchmark byte report is ``len(frame)``.
 from .codec import (decode_digest, decode_store, decode_topk,
                     decode_value, encode_digest, encode_store,
                     encode_topk, encode_value, store_body_is_empty)
-from .frames import (FRAME_KINDS, FrameBytes, FrameError, HEADER_SIZE,
-                     MAGIC, VERSION, WireCodec, decode_frame, encode_frame,
-                     peek_kind)
+from .frames import (FRAME_KINDS, FrameBytes, FrameError, FrameStream,
+                     HEADER_SIZE, MAGIC, VERSION, WireCodec, decode_frame,
+                     encode_frame, peek_kind)
 
 __all__ = [
     "decode_digest", "decode_store", "decode_topk", "decode_value",
     "encode_digest", "encode_store", "encode_topk", "encode_value",
     "store_body_is_empty",
-    "FRAME_KINDS", "FrameBytes", "FrameError", "HEADER_SIZE",
-    "MAGIC", "VERSION", "WireCodec", "decode_frame", "encode_frame",
-    "peek_kind",
+    "FRAME_KINDS", "FrameBytes", "FrameError", "FrameStream",
+    "HEADER_SIZE", "MAGIC", "VERSION", "WireCodec", "decode_frame",
+    "encode_frame", "peek_kind",
 ]

@@ -137,6 +137,99 @@ def peek_kind(buf) -> Optional[str]:
     return FRAME_KINDS.get(view[3])
 
 
+class FrameStream:
+    """Incremental frame decoder: feed byte chunks, collect whole frames.
+
+    The frame header is self-delimiting (magic + length + CRC over header
+    and payload), so one decoder serves every byte-stream shape the
+    transports produce: TCP reads split at arbitrary points, several
+    frames batched into one UDP datagram, or a reassembled oversized
+    frame. ``feed`` appends bytes and returns every frame that completed,
+    as :class:`FrameBytes` (so ``.kind`` drives stats without re-parsing).
+
+    Corruption policy is *skip and resync*: a frame whose CRC fails — or
+    bytes that are not a frame at all — are discarded up to the next
+    magic, and decoding continues from there. A dropped frame is safe by
+    construction (δ-joins are idempotent; digest-sync re-pulls anything a
+    drop lost), so the stream never stalls on a damaged link. Counters:
+
+    * ``frames``  — complete frames yielded;
+    * ``corrupt`` — frames that parsed but failed CRC / structural check;
+    * ``resyncs`` — times the scanner skipped garbage to find a magic;
+    * ``skipped_bytes`` — total bytes discarded by resyncs.
+
+    ``max_frame`` bounds the buffer: a header announcing a payload above
+    it is treated as corruption (resync) instead of waiting on — and
+    allocating for — bytes that may never arrive.
+    """
+
+    def __init__(self, max_frame: int = 64 * 1024 * 1024):
+        self._buf = bytearray()
+        self.max_frame = max_frame
+        self.frames = 0
+        self.corrupt = 0
+        self.resyncs = 0
+        self.skipped_bytes = 0
+
+    @property
+    def pending(self) -> int:
+        """Bytes buffered awaiting a frame completion."""
+        return len(self._buf)
+
+    def reset(self) -> None:
+        """Drop buffered bytes (a closed connection's partial frame)."""
+        self._buf.clear()
+
+    def _skip_past_magic(self) -> None:
+        """Discard the bogus frame start at offset 0 and rescan."""
+        del self._buf[:len(MAGIC)]
+        self.skipped_bytes += len(MAGIC)
+        self.resyncs += 1
+
+    def feed(self, data) -> list:
+        self._buf += data
+        out = []
+        while True:
+            # align buffer start to the next magic
+            idx = self._buf.find(MAGIC)
+            if idx < 0:
+                # no magic: discard all but a possible split-magic tail
+                keep = (1 if self._buf
+                        and self._buf[-1] == MAGIC[0] else 0)
+                dropped = len(self._buf) - keep
+                if dropped:
+                    del self._buf[:dropped]
+                    self.skipped_bytes += dropped
+                    self.resyncs += 1
+                return out
+            if idx > 0:
+                del self._buf[:idx]
+                self.skipped_bytes += idx
+                self.resyncs += 1
+            if len(self._buf) < HEADER_SIZE:
+                return out            # wait for the rest of the header
+            magic, version, kind_byte, length, _crc = _HEADER.unpack_from(
+                self._buf, 0)
+            if (version != VERSION or kind_byte not in FRAME_KINDS
+                    or length > self.max_frame):
+                self.corrupt += 1     # structurally impossible header
+                self._skip_past_magic()
+                continue
+            total = HEADER_SIZE + length
+            if len(self._buf) < total:
+                return out            # wait for the rest of the payload
+            candidate = bytes(self._buf[:total])
+            try:
+                kind, _payload = decode_frame(candidate)
+            except FrameError:
+                self.corrupt += 1     # CRC failure: flip inside the frame
+                self._skip_past_magic()
+                continue
+            del self._buf[:total]
+            self.frames += 1
+            out.append(FrameBytes(candidate, kind))
+
+
 # ---------------------------------------------------------------------------
 # Engine message codec: Replica tuples ⇄ frames
 # ---------------------------------------------------------------------------

@@ -1,0 +1,124 @@
+"""FrameStream: incremental frame decoding over arbitrary byte chunks.
+
+The transports never see tidy one-frame reads — TCP splits frames at
+segment boundaries, UDP batches several frames into one datagram, and a
+damaged link flips bits mid-stream. The decoder's contract:
+
+* any chunking of a valid byte stream yields exactly the same frames;
+* garbage and CRC failures are skipped to the next magic (resync) and
+  decoding continues — a corrupt frame never takes later frames with it;
+* a length field above ``max_frame`` is corruption, not an allocation;
+* a truncated tail is held, not dropped, until the rest arrives.
+"""
+
+import pytest
+
+from repro.wire import FrameStream, encode_frame
+from repro.wire.frames import HEADER_SIZE, MAGIC
+
+
+def _frames(n=5, kind="delta"):
+    return [encode_frame(kind, bytes([65 + i]) * (10 + 7 * i))
+            for i in range(n)]
+
+
+def test_byte_by_byte_feed():
+    frames = _frames()
+    stream = FrameStream()
+    got = []
+    for b in b"".join(frames):
+        got.extend(stream.feed(bytes([b])))
+    assert [bytes(f) for f in got] == [bytes(f) for f in frames]
+    assert [f.kind for f in got] == ["delta"] * len(frames)
+    assert stream.frames == len(frames)
+    assert stream.corrupt == stream.resyncs == stream.skipped_bytes == 0
+    assert stream.pending == 0
+
+
+@pytest.mark.parametrize("chunk", [1, 2, 3, 7, 64, 10_000])
+def test_any_chunking_yields_same_frames(chunk):
+    blob = b"".join(_frames(6))
+    stream = FrameStream()
+    got = []
+    for i in range(0, len(blob), chunk):
+        got.extend(stream.feed(blob[i:i + chunk]))
+    assert len(got) == 6 and stream.frames == 6
+
+
+def test_concatenated_frames_in_one_feed():
+    frames = _frames(4, kind="ack")
+    got = FrameStream().feed(b"".join(frames))
+    assert [bytes(f) for f in got] == [bytes(f) for f in frames]
+
+
+def test_garbage_prefix_resyncs_to_first_frame():
+    fr = encode_frame("digest", b"payload")
+    junk = b"\x00\xffnoise bytes here\xd4"   # ends with half a magic
+    stream = FrameStream()
+    got = stream.feed(junk + fr)
+    assert [bytes(f) for f in got] == [bytes(fr)]
+    assert stream.resyncs >= 1
+    assert stream.skipped_bytes == len(junk)
+
+
+def test_midstream_bit_flip_skips_one_frame_keeps_the_rest():
+    frames = _frames(5)
+    blob = bytearray(b"".join(frames))
+    # flip a payload bit inside frame 2
+    off = sum(len(f) for f in frames[:2]) + HEADER_SIZE + 3
+    blob[off] ^= 0x40
+    stream = FrameStream()
+    got = stream.feed(bytes(blob))
+    survivors = [bytes(f) for i, f in enumerate(frames) if i != 2]
+    assert [bytes(f) for f in got] == survivors
+    assert stream.corrupt == 1 and stream.frames == 4
+    assert stream.resyncs >= 1
+
+
+def test_header_bit_flip_also_resyncs():
+    frames = _frames(3)
+    blob = bytearray(b"".join(frames))
+    blob[len(frames[0]) + 2] ^= 0x01         # frame 1's version byte
+    got = FrameStream().feed(bytes(blob))
+    assert [bytes(f) for f in got] == [bytes(frames[0]), bytes(frames[2])]
+
+
+def test_oversized_length_field_is_corruption_not_allocation():
+    fr = encode_frame("state", b"z" * 50)
+    huge = bytearray(fr)
+    huge[4:8] = (2**31).to_bytes(4, "little")   # length field → 2 GiB
+    stream = FrameStream(max_frame=1024)
+    tail = encode_frame("ack", b"ok")
+    got = stream.feed(bytes(huge) + tail)
+    assert [bytes(f) for f in got] == [bytes(tail)]
+    assert stream.corrupt == 1
+    assert stream.pending < 1024              # nothing buffered waiting
+
+
+def test_truncated_tail_is_held_then_completed():
+    fr = encode_frame("delta", b"q" * 200)
+    stream = FrameStream()
+    assert stream.feed(fr[:HEADER_SIZE + 50]) == []
+    assert stream.pending == HEADER_SIZE + 50
+    got = stream.feed(fr[HEADER_SIZE + 50:])
+    assert [bytes(f) for f in got] == [bytes(fr)]
+    assert stream.pending == 0
+
+
+def test_magic_split_across_feeds():
+    fr = encode_frame("topk", b"body")
+    stream = FrameStream()
+    # garbage, then the first magic byte alone at a feed boundary
+    assert stream.feed(b"junk" + MAGIC[:1]) == []
+    got = stream.feed(MAGIC[1:] + bytes(fr)[2:])
+    assert [bytes(f) for f in got] == [bytes(fr)]
+
+
+def test_reset_drops_partial_state():
+    fr = encode_frame("delta", b"w" * 100)
+    stream = FrameStream()
+    stream.feed(fr[:30])
+    stream.reset()
+    assert stream.pending == 0
+    # a fresh frame decodes cleanly afterwards
+    assert len(stream.feed(bytes(fr))) == 1

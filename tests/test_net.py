@@ -1,0 +1,350 @@
+"""Socket transport tests: loopback gossip clusters, fault injection,
+and the simulator ≡ socket equivalence contract.
+
+The load-bearing properties:
+
+* a UDP mesh with injected loss/dup/reorder still converges — δ-drops
+  cost latency, never correctness;
+* frames larger than the MTU are sharded and reassembled; losing one
+  shard drops the *whole* frame (never a half-frame upward);
+* a TCP peer dying mid-frame poisons nothing — per-connection stream
+  state dies with the connection, the dialer reconnects, and
+  digest-sync repairs what the torn link lost;
+* bounded per-peer send queues shed oldest frames under backpressure,
+  and the cluster still converges afterwards;
+* one write schedule replayed through the in-process ``Simulator`` and
+  through a real loopback socket cluster converges to identical stores;
+* ``validate_net_args`` rejects every malformed CLI combination with a
+  ValueError at parse time.
+"""
+
+import asyncio
+import socket
+
+import pytest
+
+from repro.core import (MVRegister, NetConfig, Simulator, StoreReplica,
+                        converged, make_policy, run_to_convergence)
+from repro.net import (GossipNode, NetSpec, UdpTransport,
+                       default_replica_factory, start_cluster,
+                       start_gossip, stop_cluster, validate_net_args,
+                       wait_converged)
+from repro.net.node import _PeerQueue
+from repro.wire import WireCodec, decode_frame, encode_frame
+
+import random
+
+
+# ---------------------------------------------------------------------------
+# UDP: faulty mesh convergence, sharding, drop-whole-frame
+# ---------------------------------------------------------------------------
+
+def test_udp_cluster_converges_under_loss_dup_reorder():
+    async def scenario():
+        nodes = await start_cluster(3, transport="udp", tick=0.03,
+                                    loss=0.15, dup=0.10, reorder=0.10,
+                                    seed=3)
+        try:
+            for i in range(30):
+                nodes[i % 3].update(f"k{i % 11}", MVRegister,
+                                    "write_delta", nodes[i % 3].id, i)
+                await asyncio.sleep(0.004)
+            await wait_converged(nodes, timeout=30.0)
+            assert sum(n.transport.injected_losses for n in nodes) > 0
+            for n in nodes:
+                n.check_healthy()
+        finally:
+            await stop_cluster(nodes)
+    asyncio.run(scenario())
+
+
+def test_udp_oversized_frame_is_sharded_and_reassembled():
+    async def scenario():
+        nodes = await start_cluster(2, transport="udp", tick=0.03,
+                                    mtu=600, seed=7)
+        try:
+            big = "v" * 5000                  # frame well above the MTU
+            nodes[0].update("blob", MVRegister, "write_delta",
+                            nodes[0].id, big)
+            await wait_converged(nodes, timeout=15.0)
+            got = nodes[1].replica.get("blob", MVRegister).read()
+            assert got == {big}
+            assert nodes[0].stats.chunks_sent > 0
+        finally:
+            await stop_cluster(nodes)
+    asyncio.run(scenario())
+
+
+def test_udp_lost_shard_drops_whole_frame():
+    async def scenario():
+        got = []
+        a, b = UdpTransport(mtu=200), UdpTransport(mtu=200)
+        await a.start("127.0.0.1:0")
+        await b.start("127.0.0.1:0")
+        b.set_receiver(lambda src, fr: got.append(fr))
+        big = encode_frame("state", b"y" * 1000)
+        emit = a._emit
+        calls = {"n": 0}
+
+        def drop_second_shard(datagram, addr):
+            calls["n"] += 1
+            if calls["n"] != 2:
+                emit(datagram, addr)
+
+        a._emit = drop_second_shard
+        await a.send_frames(b.addr, [big])
+        await asyncio.sleep(0.15)
+        assert got == []                      # no half-frame smuggled up
+        a._emit = emit                        # and a later frame is clean
+        await a.send_frames(b.addr, [big])
+        for _ in range(100):
+            if got:
+                break
+            await asyncio.sleep(0.01)
+        assert len(got) == 1 and got[0].kind == "state"
+        kind, payload = decode_frame(got[0])
+        assert kind == "state" and bytes(payload) == b"y" * 1000
+        await a.close()
+        await b.close()
+    asyncio.run(scenario())
+
+
+def test_udp_duplicate_datagrams_are_idempotent():
+    async def scenario():
+        nodes = await start_cluster(2, transport="udp", tick=0.03,
+                                    dup=0.5, seed=13)
+        try:
+            for i in range(10):
+                nodes[0].update(f"d{i}", MVRegister, "write_delta",
+                                nodes[0].id, i)
+            await wait_converged(nodes, timeout=15.0)
+            reg = nodes[1].replica.get("d3", MVRegister)
+            assert reg.read() == {3}          # duplicated, not doubled
+        finally:
+            await stop_cluster(nodes)
+    asyncio.run(scenario())
+
+
+# ---------------------------------------------------------------------------
+# TCP: mid-frame crash, reconnect, digest-sync repair
+# ---------------------------------------------------------------------------
+
+def test_tcp_midframe_crash_then_reconnect_converges():
+    async def scenario():
+        nodes = await start_cluster(2, transport="tcp", tick=0.03,
+                                    start_gossip=False, seed=17)
+        a, b = nodes
+        try:
+            # put half a frame on a real socket, then kill the link —
+            # the torn bytes must never surface as a frame
+            torn = encode_frame("delta", b"x" * 300)
+            await a.transport.inject_raw(b.addr, bytes(torn)[:40])
+            await asyncio.sleep(0.05)
+            a.transport.abort_connections()
+            await asyncio.sleep(0.05)
+            assert b.stats.delivered == 0
+
+            await start_gossip(nodes)         # fresh dials, fresh streams
+            a.update("after", MVRegister, "write_delta", a.id, "crash")
+            await wait_converged(nodes, timeout=15.0)
+            assert b.replica.get("after", MVRegister).read() == {"crash"}
+            for n in nodes:
+                n.check_healthy()
+        finally:
+            await stop_cluster(nodes)
+    asyncio.run(scenario())
+
+
+def test_tcp_peer_restart_catches_up_via_digest_sync():
+    async def scenario():
+        policy = "digest-sync"
+        nodes = await start_cluster(2, transport="tcp", tick=0.03,
+                                    policy=policy, seed=19)
+        a, b = nodes
+        try:
+            for i in range(12):
+                a.update(f"pre{i}", MVRegister, "write_delta", a.id, i)
+            await wait_converged(nodes, timeout=15.0)
+
+            durable = b.replica.durable_snapshot()
+            addr = b.addr
+            await b.stop(abort=True)          # crash
+            a.update("while-down", MVRegister, "write_delta", a.id, "w")
+            await asyncio.sleep(0.2)
+
+            reborn = GossipNode(b.id, addr, transport="tcp",
+                                policy=policy, peers={a.id: a.addr},
+                                tick=0.03)
+            replica = default_replica_factory(policy)(b.id, [a.id])
+            replica.recover(durable)
+            reborn.adopt_replica(replica)
+            await reborn.start()
+            await wait_converged([a, reborn], timeout=15.0)
+            got = reborn.replica.get("while-down", MVRegister).read()
+            assert got == {"w"}
+            # the catch-up travelled as digest traffic, not a state dump
+            assert reborn.stats.recv_by_kind.get("digest-resp", 0) > 0
+            assert reborn.stats.recv_by_kind.get("state", 0) == 0
+            await reborn.stop()
+        finally:
+            await a.stop()
+    asyncio.run(scenario())
+
+
+# ---------------------------------------------------------------------------
+# Backpressure: bounded queues shed oldest, digest-sync repairs
+# ---------------------------------------------------------------------------
+
+def test_peer_queue_drops_oldest():
+    async def scenario():
+        q = _PeerQueue(cap=3)
+        drops = [q.put(i) for i in range(5)]
+        assert sum(drops) == 2
+        assert await q.get_batch() == [2, 3, 4]   # oldest shed first
+    asyncio.run(scenario())
+
+
+def test_backpressure_overrun_then_convergence():
+    async def scenario():
+        # reserve a port, leave it dark: the TCP dialer blocks in backoff
+        # while the tiny queue overruns
+        probe = socket.socket()
+        probe.bind(("127.0.0.1", 0))
+        dark_port = probe.getsockname()[1]
+        probe.close()
+        dark = f"127.0.0.1:{dark_port}"
+
+        a = GossipNode("gw0", "127.0.0.1:0", transport="tcp",
+                       peers={"gw1": dark}, tick=0.01, queue_cap=4)
+        await a.start()
+        for i in range(40):
+            a.update(f"q{i}", MVRegister, "write_delta", a.id, i)
+            await asyncio.sleep(0.01)
+        assert a.stats.queue_drops > 0        # admission shed frames
+
+        # now the peer comes up on that port; digest-sync repairs the shed
+        b = GossipNode("gw1", dark, transport="tcp",
+                       peers={"gw0": a.addr}, tick=0.01)
+        await b.start()
+        await wait_converged([a, b], timeout=30.0)
+        assert b.replica.get("q0", MVRegister).read() == {0}
+        await stop_cluster([a, b])
+    asyncio.run(scenario())
+
+
+# ---------------------------------------------------------------------------
+# The equivalence contract: sim replay ≡ socket replay
+# ---------------------------------------------------------------------------
+
+def _schedule(n_writes=36, n_keys=9, seed=29):
+    rng = random.Random(seed)
+    return [(rng.randrange(3), f"k{rng.randrange(n_keys)}", f"v{i}")
+            for i in range(n_writes)]
+
+
+def test_sim_socket_equivalence():
+    schedule = _schedule()
+    ids = ["gw0", "gw1", "gw2"]
+
+    # --- simulator replay ---------------------------------------------------
+    sim = Simulator(NetConfig(seed=0))
+    sim_nodes = [sim.add_node(default_replica_factory()(
+        i, [j for j in ids if j != i])) for i in ids]
+    for who, key, val in schedule:
+        sim_nodes[who].update(key, MVRegister, "write_delta",
+                              ids[who], val)
+    run_to_convergence(sim, sim_nodes, interval=1.0, max_time=60_000)
+    assert converged(sim_nodes)
+
+    # --- socket replay (same ids, same codec, same policy) ------------------
+    async def scenario():
+        nodes = await start_cluster(3, transport="udp", tick=0.03,
+                                    start_gossip=False, seed=31)
+        try:
+            for who, key, val in schedule:
+                nodes[who].update(key, MVRegister, "write_delta",
+                                  ids[who], val)
+            await start_gossip(nodes)
+            await wait_converged(nodes, timeout=30.0)
+            return [n.X for n in nodes]
+        finally:
+            await stop_cluster(nodes)
+
+    socket_states = asyncio.run(scenario())
+    # identical converged stores: same dots, same read sets, lattice-equal
+    for xs in socket_states:
+        assert xs == sim_nodes[0].X
+    for key in {k for _, k, _ in schedule}:
+        assert (socket_states[0].get(key).read()
+                == sim_nodes[0].X.get(key).read())
+
+
+# ---------------------------------------------------------------------------
+# CLI validation (serve.py --listen/--peers)
+# ---------------------------------------------------------------------------
+
+def test_validate_net_args_happy_path():
+    spec = validate_net_args("gw0@127.0.0.1:7000",
+                             "gw1@127.0.0.1:7001,gw2@127.0.0.1:7002")
+    assert isinstance(spec, NetSpec)
+    assert spec.node_id == "gw0" and spec.listen == "127.0.0.1:7000"
+    assert spec.peers == {"gw1": "127.0.0.1:7001",
+                          "gw2": "127.0.0.1:7002"}
+    assert spec.cluster_ids == ["gw0", "gw1", "gw2"]
+
+
+def test_validate_net_args_bare_addresses_name_themselves():
+    spec = validate_net_args("127.0.0.1:7000", "127.0.0.1:7001")
+    assert spec.node_id == "127.0.0.1:7000"
+    assert spec.peers == {"127.0.0.1:7001": "127.0.0.1:7001"}
+
+
+@pytest.mark.parametrize("listen,peers,kwargs,match", [
+    ("127.0.0.1:7000", None, {}, "BOTH"),
+    (None, "127.0.0.1:7001", {}, "BOTH"),
+    ("a@127.0.0.1:7000", "b@127.0.0.1:7001", {"wire": False}, "no-wire"),
+    ("a@127.0.0.1:7000", "b@127.0.0.1:7001",
+     {"transport": "carrier-pigeon"}, "transport"),
+    ("a@127.0.0.1:7000", "b@127.0.0.1:7001",
+     {"transport": "tcp", "udp_loss": 0.1}, "UDP-only"),
+    ("a@127.0.0.1:7000", "b@127.0.0.1:7001", {"udp_loss": 1.5}, "0, 1"),
+    ("a@127.0.0.1:7000", "b@127.0.0.1:7001",
+     {"session_ttl": 5.0}, "socket mode"),
+    ("a@127.0.0.1:7000", "a@127.0.0.1:7001", {}, "self-gossip"),
+    ("a@127.0.0.1:7000", "127.0.0.1:7000", {}, "self-gossip"),
+    ("a@127.0.0.1:7000", "b@127.0.0.1:7001,b@127.0.0.1:7002", {},
+     "duplicate"),
+    ("a@127.0.0.1:7000", ",", {}, "no cluster members"),
+    ("a@127.0.0.1:7000", "b@127.0.0.1:0", {}, "port 0"),
+    ("a@127.0.0.1:notaport", "b@127.0.0.1:7001", {}, "port"),
+])
+def test_validate_net_args_rejections(listen, peers, kwargs, match):
+    with pytest.raises(ValueError, match=match):
+        validate_net_args(listen, peers, **kwargs)
+
+
+def test_gossip_node_refuses_objects_on_the_wire():
+    async def scenario():
+        nodes = await start_cluster(2, transport="udp", tick=0.03,
+                                    seed=37)
+        try:
+            with pytest.raises(TypeError, match="WireCodec"):
+                nodes[0].send("gw0", "gw1", {"not": "bytes"})
+        finally:
+            await stop_cluster(nodes)
+    asyncio.run(scenario())
+
+
+def test_gossip_node_refuses_wireless_replica():
+    async def scenario():
+        def wireless(node_id, neighbors):
+            return StoreReplica(node_id, list(neighbors), causal=True,
+                                policy=make_policy("bp+rr"),
+                                rng=random.Random(1), wire=None)
+        nodes = await start_cluster(2, transport="udp",
+                                    replica_factory=wireless,
+                                    start_gossip=False, seed=41)
+        with pytest.raises(ValueError, match="wire"):
+            await start_gossip(nodes)
+        await stop_cluster(nodes)
+    asyncio.run(scenario())
