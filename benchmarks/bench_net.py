@@ -21,6 +21,9 @@ Three scenarios, each asserting the production claim it measures:
   writing its share of the session keys, observed purely from the
   outside via ``--status-file`` heartbeats until their semantic
   fingerprints agree. This is the row the CI ``net-smoke`` job runs.
+  A second, zone-annotated variant (``gwN@host:port@zN``) runs the same
+  cluster under hierarchical gossip and asserts the heartbeats report
+  each member's zone and per-link-class byte counters.
 
 Byte numbers are ``LinkStats`` — the same per-payload-kind counters the
 simulator's ``NetStats`` reports, so these rows compare directly with
@@ -176,9 +179,11 @@ def _free_ports(n: int) -> List[int]:
 
 
 def _process_cluster(sessions: int = 24, loss: float = 0.10,
-                     timeout: float = 150.0) -> Tuple[float, dict]:
+                     timeout: float = 150.0,
+                     zones: bool = False) -> Tuple[float, dict]:
     ports = _free_ports(3)
-    members = [f"gw{i}@127.0.0.1:{ports[i]}" for i in range(3)]
+    members = [f"gw{i}@127.0.0.1:{ports[i]}" + (f"@z{i}" if zones else "")
+               for i in range(3)]
     env = {**os.environ,
            "PYTHONPATH": REPO_SRC + (os.pathsep + os.environ["PYTHONPATH"]
                                      if os.environ.get("PYTHONPATH")
@@ -229,6 +234,13 @@ def _process_cluster(sessions: int = 24, loss: float = 0.10,
         assert agreed is not None, (
             f"3-process cluster did not agree within {timeout}s")
         wall = time.monotonic() - t0
+        if zones:
+            # heartbeats must carry the zone + per-link-class counters
+            assert [s["zone"] for s in agreed] == ["z0", "z1", "z2"]
+            for s in agreed:
+                assert s["bytes_by_class"], s
+            return wall, {"bytes_by_class": agreed[0]["bytes_by_class"],
+                          "zones": [s["zone"] for s in agreed]}
         bytes_by_kind = agreed[0]["bytes_by_kind"]
         return wall, bytes_by_kind
 
@@ -262,6 +274,13 @@ def run() -> List[Tuple[str, float, str]]:
     rows.append(("net_3proc_serve_cluster", wall * 1e6,
                  f"3 serve.py procs (udp loss=0.10) fingerprint-agreed "
                  f"in {wall:.1f}s bytes_by_kind={payload}"))
+
+    wall, zoned = _process_cluster(sessions=12, zones=True)
+    by_class = dict(sorted(zoned["bytes_by_class"].items()))
+    rows.append(("net_3proc_zoned_cluster", wall * 1e6,
+                 f"3 serve.py procs in 3 zones (udp loss=0.10, "
+                 f"hierarchical gossip) fingerprint-agreed in {wall:.1f}s "
+                 f"zones={zoned['zones']} bytes_by_class={by_class}"))
     return rows
 
 

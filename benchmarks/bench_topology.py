@@ -1,0 +1,213 @@
+"""Topology benchmark: hierarchical gossip vs the flat mesh, 3 zones.
+
+Three scenarios, each asserting the claim it measures:
+
+* **sim WAN bytes** — a 3-zone × 9-worker simulated cluster runs the
+  identical seeded write schedule under the flat full-mesh policy
+  (``bp+rr``) and under ``HierarchicalGossip`` (intra-zone push, elected
+  per-zone relays batching cross-zone repair as digest-sync exchanges
+  every 4th round). Both must converge to the exact write total;
+  asserted: the hierarchy ships **strictly fewer cross-zone (WAN-class)
+  bytes** — and strictly lower byte·cost under the default per-class
+  tariffs — than the flat mesh at equal workload.
+
+* **sim partition heal** — the hierarchical cluster takes writes on
+  both sides of a zone partition (one zone fully cut off for a window);
+  asserted: after the window closes the cluster converges and no write
+  from either side is lost (Def. 6: relayed digest routing is
+  join-equivalent, so repair order doesn't matter).
+
+* **socket WAN bytes** — the same flat-vs-hierarchy comparison over
+  real loopback UDP sockets (in-process ``GossipNode`` cluster, 6 nodes
+  × 3 zones, zone-annotated peer maps): both converge on the same
+  schedule, and per-link-class ``LinkStats`` must again show the
+  hierarchy strictly beating the flat mesh on cross-zone bytes.
+
+Byte classes come from ``repro.topology.link_class`` (same zone →
+intra, same region → inter, else wan); bare ``z0``-style zones are
+their own region, so every cross-zone byte here is WAN-class.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import random
+import time
+from typing import List, Tuple
+
+from repro.core import (GCounter, MVRegister, NetConfig, Simulator,
+                        StoreReplica, converged, hierarchical_policy,
+                        make_policy, run_to_convergence)
+from repro.topology import DEFAULT_PROFILES, Topology
+
+N_WORKERS = 9
+N_ZONES = 3
+N_WRITES = 60
+N_KEYS = 8
+
+
+# ---------------------------------------------------------------------------
+# sim: flat vs hierarchical on the identical seeded workload
+# ---------------------------------------------------------------------------
+
+def _sim_cluster(hier: bool, seed: int):
+    ids = [f"w{k}" for k in range(N_WORKERS)]
+    topo = Topology.zoned(ids, N_ZONES, profiles=DEFAULT_PROFILES)
+    sim = Simulator(NetConfig(seed=seed), topology=topo)
+    make = ((lambda: hierarchical_policy(topo, inter_every=4)) if hier
+            else (lambda: make_policy("bp+rr")))
+    nodes = [sim.add_node(StoreReplica(
+        i, [j for j in ids if j != i], causal=True, policy=make(),
+        rng=random.Random(seed + 1))) for i in ids]
+    return topo, sim, ids, nodes
+
+
+def _drive(sim, nodes, schedule):
+    for n in nodes:
+        sim.every(1.0, n.on_periodic)
+        sim.every(7.0, n.gc_deltas)
+    sim._ae_scheduled = {n.id for n in nodes}
+    for who, key in schedule:
+        nodes[who].update(key, GCounter, "inc_delta", nodes[who].id)
+        sim.run_for(1.0)
+    run_to_convergence(sim, nodes, interval=1.0, max_time=120_000)
+    assert converged(nodes)
+    total = sum(nodes[0].get(f"k{j}").value() for j in range(N_KEYS))
+    assert total == len(schedule), (total, len(schedule))
+
+
+def _sim_schedule(seed=3):
+    rng = random.Random(seed)
+    return [(rng.randrange(N_WORKERS), f"k{t % N_KEYS}")
+            for t in range(N_WRITES)]
+
+
+def _sim_wan_bytes() -> Tuple[float, dict]:
+    schedule = _sim_schedule()
+    stats = {}
+    t0 = time.perf_counter()
+    for label, hier in (("flat", False), ("hier", True)):
+        topo, sim, ids, nodes = _sim_cluster(hier, seed=2)
+        _drive(sim, nodes, schedule)
+        stats[label] = sim.stats
+    wall = time.perf_counter() - t0
+    flat, hier = stats["flat"], stats["hier"]
+    assert hier.cross_zone_bytes() < flat.cross_zone_bytes(), (
+        f"hierarchy must beat the flat mesh on WAN bytes: "
+        f"{hier.cross_zone_bytes()} vs {flat.cross_zone_bytes()}")
+    assert hier.link_cost < flat.link_cost, (
+        f"per-class tariffs must favour the hierarchy: "
+        f"{hier.link_cost:.0f} vs {flat.link_cost:.0f}")
+    return wall, {
+        "flat_wan": flat.cross_zone_bytes(),
+        "hier_wan": hier.cross_zone_bytes(),
+        "saving": 1 - hier.cross_zone_bytes() / flat.cross_zone_bytes(),
+        "flat_cost": flat.link_cost, "hier_cost": hier.link_cost,
+    }
+
+
+def _sim_partition_heal() -> Tuple[float, int]:
+    topo, sim, ids, nodes = _sim_cluster(hier=True, seed=9)
+    rng = random.Random(9)
+    for n in nodes:
+        sim.every(1.0, n.on_periodic)
+        sim.every(7.0, n.gc_deltas)
+    sim._ae_scheduled = {n.id for n in nodes}
+    for t in range(15):
+        n = nodes[rng.randrange(len(nodes))]
+        n.update(f"k{t % N_KEYS}", GCounter, "inc_delta", n.id)
+        sim.run_for(1.0)
+    t0_wall = time.perf_counter()
+    t0 = sim.time
+    sim.add_zone_partition(t0, t0 + 30.0, "z1")
+    inside = [n for n in nodes if topo.zone(n.id) == "z1"]
+    outside = [n for n in nodes if topo.zone(n.id) != "z1"]
+    for t in range(10):
+        a = inside[t % len(inside)]
+        a.update("cut", GCounter, "inc_delta", a.id)
+        b = outside[t % len(outside)]
+        b.update("cut", GCounter, "inc_delta", b.id)
+        sim.run_for(2.0)
+    sim.run_until(t0 + 30.0)
+    deadline = sim.time + 10_000
+    while sim.time < deadline and not converged(nodes):
+        sim.run_for(5.0)
+    assert converged(nodes), "zoned cluster did not heal"
+    got = nodes[0].get("cut").value()
+    assert got == 20, f"writes lost across the partition: {got}/20"
+    return time.perf_counter() - t0_wall, got
+
+
+# ---------------------------------------------------------------------------
+# socket: the same comparison over real loopback UDP
+# ---------------------------------------------------------------------------
+
+def _socket_wan_bytes(n=6, n_writes=36) -> Tuple[float, dict]:
+    from repro.net.node import (start_cluster, start_gossip,
+                                stop_cluster, wait_converged)
+
+    ids = [f"gw{k}" for k in range(n)]
+    topo = Topology.zoned(ids, N_ZONES)
+    rng = random.Random(41)
+    schedule = [(rng.randrange(n), f"k{t % N_KEYS}", f"v{t}")
+                for t in range(n_writes)]
+
+    async def one(hier: bool) -> dict:
+        policy = ((lambda: hierarchical_policy(topo, inter_every=4))
+                  if hier else "bp+rr")
+        nodes = await start_cluster(n, transport="udp", tick=0.03,
+                                    policy=policy, topology=topo,
+                                    start_gossip=False, seed=43)
+        try:
+            for who, key, val in schedule:
+                nodes[who].update(key, MVRegister, "write_delta",
+                                  ids[who], val)
+            await start_gossip(nodes)
+            await wait_converged(nodes, timeout=60.0)
+            return {
+                "wan": sum(n_.stats.cross_zone_bytes() for n_ in nodes),
+                "total": sum(n_.stats.bytes_sent for n_ in nodes),
+            }
+        finally:
+            await stop_cluster(nodes)
+
+    t0 = time.perf_counter()
+    flat = asyncio.run(one(False))
+    hier = asyncio.run(one(True))
+    wall = time.perf_counter() - t0
+    assert hier["wan"] < flat["wan"], (
+        f"socket mode: hierarchy must beat the flat mesh on cross-zone "
+        f"bytes: {hier['wan']} vs {flat['wan']}")
+    return wall, {"flat_wan": flat["wan"], "hier_wan": hier["wan"],
+                  "saving": 1 - hier["wan"] / flat["wan"]}
+
+
+# ---------------------------------------------------------------------------
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
+
+    wall, d = _sim_wan_bytes()
+    rows.append(("topo_sim_wan_bytes", wall * 1e6 / (2 * N_WRITES),
+                 f"3zx{N_WORKERS}w hier_wan={d['hier_wan']}B "
+                 f"flat_wan={d['flat_wan']}B saving={d['saving']:.0%} "
+                 f"cost {d['hier_cost']:.0f} vs {d['flat_cost']:.0f} "
+                 f"(assert hier<flat, equal workload, both converged)"))
+
+    wall, got = _sim_partition_heal()
+    rows.append(("topo_sim_partition_heal", wall * 1e6,
+                 f"z1 cut 30s, writes both sides, healed+converged, "
+                 f"counter={got}/20 (no write lost)"))
+
+    wall, d = _socket_wan_bytes()
+    rows.append(("topo_socket_wan_bytes", wall * 1e6,
+                 f"6-node udp 3-zone hier_wan={d['hier_wan']}B "
+                 f"flat_wan={d['flat_wan']}B saving={d['saving']:.0%} "
+                 f"(assert hier<flat over real sockets)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

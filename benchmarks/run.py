@@ -30,6 +30,11 @@ Prints ``name,us_per_call,derived`` CSV:
                             under 10% loss), TCP kill/restart digest-sync
                             catch-up (<=25% of full state), 3-process
                             serve.py cluster fingerprint agreement
+  bench_topology            3-zone hierarchical gossip vs flat mesh:
+                            cross-zone (WAN) bytes strictly beat the
+                            mesh at equal workload in sim AND over real
+                            loopback sockets; zone partition heals with
+                            no write lost
   bench_roofline            per-(arch × shape × mesh) roofline rows from
                             the dry-run artifacts (run dryrun first)
 
@@ -82,7 +87,7 @@ def main(argv=None) -> None:
     from . import (bench_antientropy, bench_dots, bench_kernels,
                    bench_lifecycle, bench_message_complexity, bench_net,
                    bench_roofline, bench_store, bench_tensor_sync,
-                   bench_wire)
+                   bench_topology, bench_wire)
 
     modules = [
         ("message_complexity", bench_message_complexity),
@@ -93,6 +98,7 @@ def main(argv=None) -> None:
         ("wire", bench_wire),
         ("lifecycle", bench_lifecycle),
         ("dots", bench_dots),
+        ("topology", bench_topology),
         ("net", bench_net),
         ("roofline", bench_roofline),
     ]

@@ -42,6 +42,7 @@ from .propagation import (AvoidBackPropagation, Compose, DeltaEntry,
                           causal_policy_spec, make_policy, stable_seed)
 from .antientropy import (BasicNode, CausalNode, FullStateNode, converged,
                           run_to_convergence)
+from .hiergossip import HierarchicalGossip, hierarchical_policy
 from .sim import NetConfig, NetStats, Node, Simulator, structural_size
 
 __all__ = [
@@ -57,5 +58,6 @@ __all__ = [
     "causal_policy_spec", "make_policy", "stable_seed",
     "BasicNode", "CausalNode", "FullStateNode", "converged",
     "run_to_convergence",
+    "HierarchicalGossip", "hierarchical_policy",
     "NetConfig", "NetStats", "Node", "Simulator", "structural_size",
 ]

@@ -77,12 +77,33 @@ class NetStats:
     bytes_sent: int = 0        # structural size of all sent payloads
     by_kind: Dict[str, int] = field(default_factory=dict)
     bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    # link-class split (populated only under a Topology): the same byte
+    # totals re-bucketed by intra / inter / wan, plus the cost-model
+    # accumulator (bytes × the link's byte_cost — WAN egress is billed)
+    by_class: Dict[str, int] = field(default_factory=dict)
+    bytes_by_class: Dict[str, int] = field(default_factory=dict)
+    link_cost: float = 0.0
 
-    def record(self, kind: str, size: int) -> None:
+    def record(self, kind: str, size: int,
+               link_class: Optional[str] = None,
+               byte_cost: float = 1.0) -> None:
         self.sent += 1
         self.bytes_sent += size
         self.by_kind[kind] = self.by_kind.get(kind, 0) + 1
         self.bytes_by_kind[kind] = self.bytes_by_kind.get(kind, 0) + size
+        if link_class is not None:
+            self.by_class[link_class] = self.by_class.get(link_class, 0) + 1
+            self.bytes_by_class[link_class] = (
+                self.bytes_by_class.get(link_class, 0) + size)
+            self.link_cost += size * byte_cost
+
+    def cross_zone_bytes(self) -> int:
+        """Bytes shipped on links that leave the sender's zone (the
+        inter + wan classes) — what hierarchical gossip exists to
+        minimize, and what ``bench_topology`` compares against the flat
+        mesh. Zero when no topology was attached (nothing was classed)."""
+        return sum(v for cls, v in self.bytes_by_class.items()
+                   if cls != "intra")
 
     PAYLOAD_KINDS = ("delta", "state", "handoff", "membership",
                      "digest", "digest-resp")
@@ -144,8 +165,16 @@ class Node:
 
 
 class Simulator:
-    def __init__(self, config: NetConfig = NetConfig()):
+    """Discrete-event network; ``topology`` (a :class:`repro.topology.
+    Topology`) makes links non-uniform: each message's loss/dup/delay
+    come from the link's class profile (falling back to ``config`` for
+    classes without an override) and bytes are accounted per class.
+    Without a topology every link behaves identically — the flat mesh."""
+
+    def __init__(self, config: NetConfig = NetConfig(),
+                 topology: Optional[Any] = None):
         self.cfg = config
+        self.topology = topology
         self.rng = random.Random(config.seed)
         self.time = 0.0
         self._q: List[Tuple[float, int, Callable[[], None]]] = []
@@ -166,6 +195,19 @@ class Simulator:
                       side_a: Iterable[str], side_b: Iterable[str]) -> None:
         self.partitions.append((t_start, t_end, frozenset(side_a),
                                 frozenset(side_b)))
+
+    def add_zone_partition(self, t_start: float, t_end: float,
+                           zone: str) -> None:
+        """Cut one zone off from the rest of the world for a window —
+        the canonical multi-region failure. Requires a topology; sides
+        are computed from the nodes added so far."""
+        if self.topology is None:
+            raise ValueError("zone partitions need a Simulator topology")
+        side_a = [i for i in self.nodes if self.topology.zone(i) == zone]
+        side_b = [i for i in self.nodes if self.topology.zone(i) != zone]
+        if not side_a or not side_b:
+            raise ValueError(f"zone {zone!r} partition has an empty side")
+        self.add_partition(t_start, t_end, side_a, side_b)
 
     def _partitioned(self, src: str, dst: str) -> bool:
         for t0, t1, a, b in self.partitions:
@@ -195,16 +237,30 @@ class Simulator:
         if kind is None:
             kind = (msg[0] if isinstance(msg, tuple) and msg
                     else type(msg).__name__)
-        self.stats.record(str(kind), structural_size(msg))
-        if self._partitioned(src, dst) or self.rng.random() < self.cfg.loss:
+        # per-link-class conditions: the link's profile overrides the
+        # flat NetConfig when the topology carries one for its class
+        link_cls: Optional[str] = None
+        loss, dup = self.cfg.loss, self.cfg.dup
+        min_delay, max_delay = self.cfg.min_delay, self.cfg.max_delay
+        byte_cost = 1.0
+        if self.topology is not None:
+            link_cls = self.topology.link_class(src, dst)
+            prof = self.topology.profiles.get(link_cls)
+            if prof is not None:
+                loss, dup = prof.loss, prof.dup
+                min_delay, max_delay = prof.min_delay, prof.max_delay
+                byte_cost = prof.byte_cost
+        self.stats.record(str(kind), structural_size(msg),
+                          link_class=link_cls, byte_cost=byte_cost)
+        if self._partitioned(src, dst) or self.rng.random() < loss:
             self.stats.dropped += 1
             return
         copies = 1
-        if self.rng.random() < self.cfg.dup:
+        if self.rng.random() < dup:
             copies += 1
             self.stats.duplicated += 1
         for _ in range(copies):
-            delay = self.rng.uniform(self.cfg.min_delay, self.cfg.max_delay)
+            delay = self.rng.uniform(min_delay, max_delay)
 
             def deliver(dst=dst, src=src, msg=msg):
                 node = self.nodes.get(dst)

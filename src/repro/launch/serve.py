@@ -82,21 +82,29 @@ def main() -> None:
     ap.add_argument("--session-ttl", type=float, default=None,
                     metavar="SECONDS",
                     help="key lifecycle for --sessions: every session "
-                         "key expires SECONDS (sim time) after its last "
-                         "write, and the owner-driven reaper drops it to "
-                         "a tombstone once the whole replica set acks "
-                         "the expiry (repro.lifecycle)")
+                         "key expires SECONDS after its last write, and "
+                         "the owner-driven reaper drops it to a tombstone "
+                         "once the whole replica set acks the expiry "
+                         "(repro.lifecycle). Works in the simulator (sim "
+                         "time) and in socket mode (wall time, reap "
+                         "frames over real UDP/TCP)")
     ap.add_argument("--no-wire", dest="wire", action="store_false",
                     help="gossip Python objects instead of binary δ-wire "
                          "frames (frames are the default: gateways move "
                          "bytes, and reported traffic is measured frame "
                          "lengths; incompatible with socket mode)")
-    ap.add_argument("--listen", metavar="[ID@]HOST:PORT", default=None,
+    ap.add_argument("--listen", metavar="[ID@]HOST:PORT[@ZONE]",
+                    default=None,
                     help="socket mode: gossip over real sockets as one "
                          "member of an OS-process cluster (repro.net); "
-                         "requires --peers")
-    ap.add_argument("--peers", metavar="[ID@]H:P,...", default=None,
-                    help="socket mode: the other cluster members")
+                         "requires --peers. An @ZONE suffix (zone or "
+                         "region/zone) places this member in a failure "
+                         "domain: byte accounting splits by link class "
+                         "and gossip goes hierarchical (intra-zone push, "
+                         "relay-batched cross-zone digest-sync)")
+    ap.add_argument("--peers", metavar="[ID@]H:P[@ZONE],...", default=None,
+                    help="socket mode: the other cluster members (zone "
+                         "annotations must cover every member or none)")
     ap.add_argument("--transport", default="udp", choices=("udp", "tcp"),
                     help="socket-mode channel (UDP datagrams with "
                          "MTU splitting/batching, or TCP streams with "
@@ -343,6 +351,47 @@ def _session_fingerprint(replica, keys) -> str:
     return acc.hexdigest()
 
 
+def _socket_replica_factory(args, spec, topo):
+    """The socket-mode replica factory: ``--ship-policy`` (composed with
+    :class:`HierarchicalGossip` when the members carry zones), plus —
+    under ``--session-ttl`` — full-replication key ownership and the
+    acked reaper, so the tombstone quorum runs over real UDP/TCP.
+
+    Ownership is the *whole static cluster* (replication = member
+    count): every process derives the identical owner map from the same
+    ``--peers`` list with no membership gossip, every replica holds
+    every key (the cross-process fingerprint check stays meaningful),
+    and a reap commits only once every member acked the expiry."""
+    from repro.core.hiergossip import HierarchicalGossip
+    from repro.core.propagation import stable_seed
+    from repro.wire import WireCodec
+
+    ownership = None
+    if spec.session_ttl:
+        from repro.sync import KeyOwnership
+        ids = spec.cluster_ids
+        ownership = KeyOwnership(ids, replication=len(ids), topology=topo)
+
+    def make(node_id, neighbors):
+        pol = make_policy(args.ship_policy)
+        if topo is not None:
+            pol = Compose(pol, HierarchicalGossip(topo))
+        replica = StoreReplica(
+            node_id, list(neighbors), causal=True, policy=pol,
+            rng=random.Random(stable_seed(node_id)), wire=WireCodec(),
+            ownership=ownership, ttl=spec.session_ttl)
+        if spec.session_ttl:
+            from repro.lifecycle import ReaperProtocol
+            # grace/retry scale with the tick: proposals should survive
+            # a couple of lost datagrams but not stall the reap for long
+            ReaperProtocol(replica, ownership,
+                           grace=max(2 * args.tick, 0.5),
+                           retry=max(6 * args.tick, 1.0))
+        return replica
+
+    return make
+
+
 def _socket_sessions(args, spec) -> None:
     """One member of a real socket gossip cluster (``repro.net``): write
     this process's share of the session keys, gossip frames until the
@@ -353,18 +402,24 @@ def _socket_sessions(args, spec) -> None:
         from repro.net import GossipNode
 
         n_sessions = args.sessions if args.sessions else 12
+        topo = spec.topology
         node = GossipNode(spec.node_id, spec.listen,
                           transport=spec.transport, peers=spec.peers,
-                          policy=args.ship_policy, tick=args.tick,
+                          replica_factory=_socket_replica_factory(
+                              args, spec, topo),
+                          topology=topo, tick=args.tick,
                           loss=args.udp_loss, seed=args.seed)
         await node.start()
         ids = spec.cluster_ids
         rank, n = ids.index(spec.node_id), len(ids)
         mine = [s for s in range(n_sessions) if s % n == rank]
         print(f"[serve.net] {spec.node_id} listening on {node.addr} "
-              f"({spec.transport}, policy={args.ship_policy}, "
-              f"{len(spec.peers)} peers, udp_loss={args.udp_loss}); "
-              f"writing {len(mine)}/{n_sessions} sessions")
+              f"({spec.transport}, policy={args.ship_policy}"
+              f"{'+hier' if topo is not None else ''}, "
+              f"{len(spec.peers)} peers, udp_loss={args.udp_loss}"
+              f"{f', zone={node.zone}' if node.zone else ''}"
+              f"{f', ttl={spec.session_ttl}s' if spec.session_ttl else ''}"
+              f"); writing {len(mine)}/{n_sessions} sessions")
         for s in mine:
             for status in ("queued", "prefilling", "decoding", "done"):
                 node.update(f"sess{s}", MVRegister, "write_delta",
@@ -405,6 +460,12 @@ def _write_status(path: str, node, keys, n_sessions: int) -> None:
         "fingerprint": _session_fingerprint(node.replica, keys),
         "bytes_by_kind": node.stats.bytes_by_kind,
         "stats": node.stats.summary(),
+        # zoned observability: where this member sits and how many of
+        # its bytes were local vs cross-zone (empty/None on a flat mesh)
+        "zone": node.zone,
+        "bytes_by_class": node.stats.bytes_by_class,
+        "recv_bytes_by_class": node.stats.recv_bytes_by_class,
+        "tombstones": len(node.X.tombstoned_keys()),
     }
     tmp = f"{path}.tmp"
     with open(tmp, "w") as f:

@@ -40,8 +40,9 @@ import time
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
-from ..core.propagation import (Replica, StoreReplica, make_policy,
-                                stable_seed)
+from ..core.propagation import (Replica, ShippingPolicy, StoreReplica,
+                                make_policy, stable_seed)
+from ..topology import Topology
 from ..wire import WireCodec
 from .stats import LinkStats
 from .transport import Transport, make_transport
@@ -76,12 +77,21 @@ class _PeerQueue:
         return batch
 
 
-def default_replica_factory(policy: str = DEFAULT_POLICY,
+def default_replica_factory(policy=DEFAULT_POLICY,
                             **replica_kwargs) -> Callable[..., Replica]:
     """A factory building the standard socket-mode replica: causal keyed
-    :class:`StoreReplica` gossiping binary frames under ``policy``."""
+    :class:`StoreReplica` gossiping binary frames under ``policy`` — a
+    spec string, a ready :class:`ShippingPolicy` (hook state lives on the
+    replica, so one instance serves a whole in-process cluster), or a
+    zero-arg callable returning one per replica."""
     def make(node_id: str, neighbors: Sequence[str]) -> Replica:
-        kw = dict(causal=True, policy=make_policy(policy),
+        if isinstance(policy, str):
+            pol = make_policy(policy)
+        elif isinstance(policy, ShippingPolicy):
+            pol = policy
+        else:
+            pol = policy()
+        kw = dict(causal=True, policy=pol,
                   rng=random.Random(stable_seed(node_id)),
                   wire=WireCodec())
         kw.update(replica_kwargs)
@@ -104,13 +114,20 @@ class GossipNode:
                  transport: str = "udp",
                  peers: Optional[Dict[str, str]] = None,
                  replica_factory: Optional[Callable] = None,
-                 policy: str = DEFAULT_POLICY,
+                 policy=DEFAULT_POLICY,
+                 topology: Optional[Topology] = None,
                  tick: float = 0.1, gc_every: int = 7,
                  queue_cap: int = 256, mtu: int = 1400,
                  loss: float = 0.0, dup: float = 0.0, reorder: float = 0.0,
                  seed: int = 0):
         self.id = node_id
         self.listen = listen
+        # zone annotations: classify every sent/received frame's link
+        # (intra / inter / wan) in the byte accounting — the socket-side
+        # measurement ``bench_topology`` compares against the simulator
+        self.topology = topology
+        self.zone: Optional[str] = (topology.zone(node_id)
+                                    if topology is not None else None)
         self.stats = LinkStats()
         self.transport: Transport = make_transport(
             transport, node_id, mtu=mtu, loss=loss, dup=dup,
@@ -143,7 +160,12 @@ class GossipNode:
                 "socket gossip ships binary δ-wire frames; attach a "
                 "WireCodec to the replica (wire=WireCodec())")
         kind = getattr(msg, "kind", "frame")
-        self.stats.record(str(kind), len(msg))
+        link_cls, cost = None, 1.0
+        if self.topology is not None:
+            link_cls = self.topology.link_class(self.id, dst)
+            cost = self.topology.byte_cost(self.id, dst)
+        self.stats.record(str(kind), len(msg),
+                          link_class=link_cls, byte_cost=cost)
         q = self._queues.get(dst)
         if q is None:
             self.stats.dropped += 1          # unknown/departed peer
@@ -221,8 +243,11 @@ class GossipNode:
     def _on_frame(self, src_key: str, frame) -> None:
         """Transport delivery: ``src_key`` is a logical id (TCP hello) or
         a source address (UDP) mapped through the peer table."""
-        self.stats.record_recv(getattr(frame, "kind", "frame"), len(frame))
         src = self._addr_to_id.get(src_key, src_key)
+        link_cls = (self.topology.link_class(src, self.id)
+                    if self.topology is not None else None)
+        self.stats.record_recv(getattr(frame, "kind", "frame"), len(frame),
+                               link_class=link_cls)
         if self.replica is None:
             return
         try:
@@ -269,8 +294,9 @@ class GossipNode:
 # ---------------------------------------------------------------------------
 
 async def start_cluster(n: int, *, transport: str = "udp",
-                        policy: str = DEFAULT_POLICY,
+                        policy=DEFAULT_POLICY,
                         replica_factory: Optional[Callable] = None,
+                        topology: Optional[Topology] = None,
                         tick: float = 0.05, queue_cap: int = 256,
                         mtu: int = 1400, loss: float = 0.0,
                         dup: float = 0.0, reorder: float = 0.0,
@@ -281,9 +307,13 @@ async def start_cluster(n: int, *, transport: str = "udp",
     Binds everyone first (so the OS assigns ports), then wires the peer
     tables, then — unless ``start_gossip=False``, for callers that want
     to apply writes before the first tick — starts the gossip tasks.
+    ``topology`` annotates the members with zones: frame bytes are
+    classed intra/inter/wan per link (pair with a zone-aware policy via
+    ``policy``/``replica_factory`` for hierarchical gossip).
     """
     nodes = [GossipNode(f"gw{k}", f"{host}:0", transport=transport,
                         policy=policy, replica_factory=replica_factory,
+                        topology=topology,
                         tick=tick, queue_cap=queue_cap, mtu=mtu,
                         loss=loss, dup=dup, reorder=reorder,
                         seed=seed + k)

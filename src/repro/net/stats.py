@@ -16,7 +16,7 @@ its own, so catch-up cost is measured at the receiver).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict
+from typing import Dict, Optional
 
 from ..core.sim import NetStats
 
@@ -37,6 +37,11 @@ class LinkStats(NetStats):
     bytes_recv: int = 0
     recv_by_kind: Dict[str, int] = field(default_factory=dict)
     recv_bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    # receive-side mirror of the per-link-class split (populated only
+    # when the node carries a Topology; send side inherits by_class /
+    # bytes_by_class / link_cost from NetStats)
+    recv_by_class: Dict[str, int] = field(default_factory=dict)
+    recv_bytes_by_class: Dict[str, int] = field(default_factory=dict)
     # datagram channel
     datagrams_sent: int = 0
     datagrams_recv: int = 0
@@ -48,12 +53,24 @@ class LinkStats(NetStats):
     # admission control
     queue_drops: int = 0           # frames dropped by bounded send queues
 
-    def record_recv(self, kind: str, size: int) -> None:
+    def record_recv(self, kind: str, size: int,
+                    link_class: Optional[str] = None) -> None:
         self.delivered += 1
         self.bytes_recv += size
         self.recv_by_kind[kind] = self.recv_by_kind.get(kind, 0) + 1
         self.recv_bytes_by_kind[kind] = (
             self.recv_bytes_by_kind.get(kind, 0) + size)
+        if link_class is not None:
+            self.recv_by_class[link_class] = (
+                self.recv_by_class.get(link_class, 0) + 1)
+            self.recv_bytes_by_class[link_class] = (
+                self.recv_bytes_by_class.get(link_class, 0) + size)
+
+    def recv_cross_zone_bytes(self) -> int:
+        """Bytes received over links that left the sender's zone — the
+        receive-side twin of :meth:`NetStats.cross_zone_bytes`."""
+        return sum(v for cls, v in self.recv_bytes_by_class.items()
+                   if cls != "intra")
 
     # the kinds that carry state toward the receiver (PAYLOAD_KINDS minus
     # digest *requests* — those are the poller's cost, scale with the
@@ -75,10 +92,15 @@ class LinkStats(NetStats):
                    if k in self.STATE_KINDS)
 
     def summary(self) -> Dict[str, int]:
-        return {
+        out = {
             "sent": self.sent, "bytes_sent": self.bytes_sent,
             "delivered": self.delivered, "bytes_recv": self.bytes_recv,
             "queue_drops": self.queue_drops,
             "reassembly_drops": self.reassembly_drops,
             "resyncs": self.resyncs, "reconnects": self.reconnects,
         }
+        if self.bytes_by_class:          # zoned node: show the class split
+            out["bytes_by_class"] = dict(self.bytes_by_class)
+        if self.recv_bytes_by_class:
+            out["recv_bytes_by_class"] = dict(self.recv_bytes_by_class)
+        return out

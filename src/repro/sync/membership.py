@@ -28,6 +28,7 @@ from ..core.crdts import AWORSet, DeltaCRDT, LWWSet
 from ..core.dots import ReplicaId
 from ..core.propagation import Replica, ShippingPolicy
 from ..core.store import LatticeStore
+from ..topology import Topology
 
 
 @dataclass(frozen=True)
@@ -177,7 +178,22 @@ class KeyOwnership:
     hot key's readers. Readers receive the key's gossip through
     digest-sync pull (``ShardByKey.restrict_pull`` routes by
     ``reads``), but stay out of the write set — they are not pushed to,
-    never buffer/forward the key, and never gate its reap quorum."""
+    never buffer/forward the key, and never gate its reap quorum.
+
+    ``topology`` (a :class:`repro.topology.Topology`) turns on
+    **zone-spreading**: whenever the cluster spans ≥ 2 zones and
+    ``replication ≥ 2``, a key's write set is forced across ≥ 2 failure
+    domains — the rendezvous prefix keeps its first ``replication - 1``
+    slots, and if the whole prefix landed in one zone the *last* slot is
+    swapped for the highest-ranked worker of any other zone. Read
+    extension becomes zone-coverage-greedy: the extra
+    ``read_replication`` slots first place a replica in each not-yet-
+    covered zone (in rank order), then fill by rank — so every zone
+    prefers a zone-local read replica. With one zone (or no topology)
+    the ranking is *exactly* the flat rendezvous order, and reshuffle
+    under join/leave stays minimal: a key's write set changes only when
+    the changed worker sits in the rendezvous prefix or in the write set
+    itself (the swap target is itself rank-maximal among its zone)."""
 
     _CACHE_MAX = 1 << 16    # bound the per-key memo (serving keyspaces
                             # are unbounded; rendezvous recompute is cheap)
@@ -185,7 +201,8 @@ class KeyOwnership:
     def __init__(self, workers: Union[Iterable[ReplicaId],
                                       Callable[[], Iterable[ReplicaId]]],
                  replication: int = 1,
-                 read_replication: Optional[int] = None):
+                 read_replication: Optional[int] = None,
+                 topology: Optional[Topology] = None):
         if replication < 1:
             raise ValueError(f"replication must be ≥ 1, got {replication}")
         if read_replication is not None and read_replication < replication:
@@ -196,6 +213,7 @@ class KeyOwnership:
         self.replication = replication
         self.read_replication = (replication if read_replication is None
                                  else read_replication)
+        self.topology = topology
         # owners() sits on the gossip hot path (ShardByKey consults it per
         # key per destination per round): memoize the read-width ranking
         # per key (owners = its prefix), invalidated whenever the live
@@ -209,6 +227,43 @@ class KeyOwnership:
         ws = self._workers() if callable(self._workers) else self._workers
         return tuple(sorted(ws))
 
+    def _rank_among(self, key: str,
+                    ws: Tuple[ReplicaId, ...]) -> Tuple[ReplicaId, ...]:
+        """The read-width, zone-aware ranking of ``ws`` for ``key`` —
+        the write set is its ``replication`` prefix. Pure function of
+        (key, worker snapshot), so :class:`RebalanceHandoff` can replay
+        it against the *previous* worker set."""
+        width = self.read_replication
+        ranked = sorted(ws, key=lambda w: (-rendezvous_score(w, key), w))
+        topo = self.topology
+        if topo is None:
+            return tuple(ranked[:width])
+        zone = {w: topo.zone(w) for w in ranked}
+        if len(set(zone.values())) < 2:
+            return tuple(ranked[:width])   # one zone ⇒ exactly flat
+        r = self.replication
+        write = ranked[:r]
+        if r >= 2 and len({zone[w] for w in write}) < 2:
+            # single-zone prefix: the last slot yields to the highest-
+            # ranked worker of any other zone (≥ 2 failure domains)
+            swap = next(w for w in ranked[r:] if zone[w] != zone[write[0]])
+            write = write[:-1] + [swap]
+        out = list(write)
+        covered = {zone[w] for w in out}
+        rest = [w for w in ranked if w not in out]
+        for w in rest:                     # zone-coverage-greedy readers
+            if len(out) >= width:
+                break
+            if zone[w] not in covered:
+                out.append(w)
+                covered.add(zone[w])
+        for w in rest:                     # then fill by rank
+            if len(out) >= width:
+                break
+            if w not in out:
+                out.append(w)
+        return tuple(out)
+
     def _ranked(self, key: str) -> Tuple[ReplicaId, ...]:
         ws = self.workers()
         if ws != self._cache_workers:
@@ -216,8 +271,7 @@ class KeyOwnership:
             self._cache = {}
         hit = self._cache.get(key)
         if hit is None:
-            hit = (owners_for_key(key, ws, self.read_replication)
-                   if ws else ())
+            hit = self._rank_among(key, ws) if ws else ()
             if len(self._cache) >= self._CACHE_MAX:
                 self._cache.clear()
             self._cache[key] = hit
@@ -225,6 +279,16 @@ class KeyOwnership:
 
     def owners(self, key: str) -> Tuple[ReplicaId, ...]:
         return self._ranked(key)[:self.replication]
+
+    def owners_among(self, key: str, workers: Iterable[ReplicaId]
+                     ) -> Tuple[ReplicaId, ...]:
+        """The write set ``key`` *would* have over an arbitrary worker
+        snapshot — same zone-spread rule, no cache. Rebalance uses this
+        to recover a key's owners under the previous membership."""
+        ws = tuple(sorted(workers))
+        if not ws:
+            return ()
+        return self._rank_among(key, ws)[:self.replication]
 
     def owner(self, key: str) -> Optional[ReplicaId]:
         """The primary (top-scoring) owner, or None with no workers."""
@@ -263,6 +327,46 @@ class KeyOwnership:
     def reads(self, worker: ReplicaId, key: str) -> bool:
         return worker in self.readers(key)
 
+    # -- zone relays (hierarchical gossip aggregation) -----------------------------
+    def relays(self) -> Dict[str, ReplicaId]:
+        """zone → its elected relay over the current worker set (empty
+        without a topology)."""
+        if self.topology is None:
+            return {}
+        ws = self.workers()
+        return {z: r for z in self.topology.zone_names(ws)
+                if (r := self.topology.relay(z, ws)) is not None}
+
+    def _relay_reads(self, worker: ReplicaId, key: str) -> bool:
+        """Is ``worker`` its zone's elected relay AND does anyone in
+        that zone read ``key``? The aggregation rule of hierarchical
+        gossip: a relay carries its whole zone's read interest across
+        the zone boundary."""
+        topo = self.topology
+        if topo is None:
+            return False
+        ws = self.workers()
+        z = topo.zone(worker)
+        if topo.relay(z, ws) != worker:
+            return False
+        return any(self.reads(m, key) for m in topo.members(z, ws))
+
+    def buffers(self, worker: ReplicaId, key: str) -> bool:
+        """May ``worker`` buffer/forward ``key``'s received deltas?
+        Owners always; additionally its zone's relay buffers any key a
+        zone-mate reads, so rows pulled across the zone boundary survive
+        long enough to be pushed on to the zone (Def. 6 makes the extra
+        forwarding join-equivalent — it can only deliver sooner)."""
+        return self.replicates(worker, key) or self._relay_reads(worker, key)
+
+    def routes_pull(self, worker: ReplicaId, key: str) -> bool:
+        """Does a digest response to ``worker`` carry ``key``? Readers
+        always; additionally a zone relay pulls on behalf of every
+        zone-mate's read set — the responder cannot see *why* a relay
+        asks, so the aggregated interest lives here, in the ownership
+        map both sides share."""
+        return self.reads(worker, key) or self._relay_reads(worker, key)
+
 
 class ShardByKey(ShippingPolicy):
     """Ship each key's deltas only to the replicas that own/replicate it.
@@ -296,8 +400,15 @@ class ShardByKey(ShippingPolicy):
         self.name = f"shard:{ownership.replication}"
 
     def _dst_keys(self, dst: ReplicaId, store: LatticeStore):
-        return [k for k in store.all_keys()
-                if self.ownership.replicates(dst, k)]
+        # Push routes by the destination's *buffer* set: identical to
+        # ``replicates`` on a flat topology, but under a zoned one it
+        # additionally lets a zone relay accept (and re-push) the keys
+        # its zone-mates read, which is how a delta born in a zone with
+        # no other owner of its key reaches the key's remote replicas
+        # without any cross-zone fanout.
+        may = getattr(self.ownership, "buffers", None)
+        route = may if may is not None else self.ownership.replicates
+        return [k for k in store.all_keys() if route(dst, k)]
 
     def include(self, replica, dst, index, entry) -> bool:
         if not isinstance(entry.delta, LatticeStore):
@@ -324,11 +435,15 @@ class ShardByKey(ShippingPolicy):
         """Digest responses route by the READ set: a requester receives
         the keys it replicates *or subscribes to* (a pure routing
         restriction, which is all the pull hook permits) — this is the
-        entire transport story of read replicas."""
+        entire transport story of read replicas. Under a zoned topology
+        the route widens to ``routes_pull``: a zone relay's request also
+        pulls every key its zone-mates read (cross-zone aggregation)."""
         if not isinstance(store, LatticeStore):
             return store
+        routes = getattr(self.ownership, "routes_pull",
+                         self.ownership.reads)
         return store.restrict(k for k in store.all_keys()
-                              if self.ownership.reads(dst, k))
+                              if routes(dst, k))
 
 
 class RebalanceHandoff:
@@ -378,8 +493,10 @@ class RebalanceHandoff:
         self.replica._known.clear()
         by_dst: Dict[ReplicaId, list] = {}
         for key in store.all_keys():    # tombstones hand off like values
-            old = (owners_for_key(key, prev, self.ownership.replication)
-                   if prev else ())
+            # replay the ownership's own (possibly zone-aware) rule over
+            # the previous snapshot — flat owners_for_key would disagree
+            # with a zone-spread write set and mis-assign the pusher role
+            old = (self.ownership.owners_among(key, prev) if prev else ())
             if self.replica.id not in old:
                 continue              # only a key's old owners push it
             for dst in self.ownership.owners(key):

@@ -309,7 +309,13 @@ def test_validate_net_args_bare_addresses_name_themselves():
      {"transport": "tcp", "udp_loss": 0.1}, "UDP-only"),
     ("a@127.0.0.1:7000", "b@127.0.0.1:7001", {"udp_loss": 1.5}, "0, 1"),
     ("a@127.0.0.1:7000", "b@127.0.0.1:7001",
-     {"session_ttl": 5.0}, "socket mode"),
+     {"session_ttl": -2.0}, "positive"),
+    ("a@127.0.0.1:7000@z0", "b@127.0.0.1:7001", {}, "every member"),
+    ("a@127.0.0.1:7000", "b@127.0.0.1:7001@z1,c@127.0.0.1:7002", {},
+     "every member"),
+    ("@127.0.0.1:7000@z0", "b@127.0.0.1:7001@z1", {}, "ID@HOST:PORT@ZONE"),
+    ("a@127.0.0.1:7000@z0@extra", "b@127.0.0.1:7001@z1", {},
+     r"\[ID@\]HOST:PORT\[@ZONE\]"),
     ("a@127.0.0.1:7000", "a@127.0.0.1:7001", {}, "self-gossip"),
     ("a@127.0.0.1:7000", "127.0.0.1:7000", {}, "self-gossip"),
     ("a@127.0.0.1:7000", "b@127.0.0.1:7001,b@127.0.0.1:7002", {},
@@ -347,4 +353,160 @@ def test_gossip_node_refuses_wireless_replica():
         with pytest.raises(ValueError, match="wire"):
             await start_gossip(nodes)
         await stop_cluster(nodes)
+    asyncio.run(scenario())
+
+
+# ---------------------------------------------------------------------------
+# Zoned clusters: CLI zones, link-class accounting, hierarchical gossip,
+# socket-mode key lifecycle (the reaper quorum over real UDP)
+# ---------------------------------------------------------------------------
+
+def test_validate_net_args_zones_and_ttl():
+    spec = validate_net_args(
+        "gw0@127.0.0.1:7000@eu/a",
+        "gw1@127.0.0.1:7001@eu/b,gw2@127.0.0.1:7002@us/a",
+        session_ttl=4.0)
+    assert spec.zones == {"gw0": "eu/a", "gw1": "eu/b", "gw2": "us/a"}
+    assert spec.session_ttl == 4.0
+    topo = spec.topology
+    assert topo.link_class("gw0", "gw1") == "inter"   # eu/a ↔ eu/b
+    assert topo.link_class("gw0", "gw2") == "wan"     # eu ↔ us
+    # flat spec: no zones, no topology, ttl defaults off
+    flat = validate_net_args("gw0@127.0.0.1:7000", "gw1@127.0.0.1:7001")
+    assert flat.zones == {} and flat.topology is None
+    assert flat.session_ttl is None
+
+
+def test_sim_socket_equivalence_zoned():
+    """The PR-8 equivalence contract extended to a zoned cluster: one
+    write schedule replayed through a zoned Simulator and through a
+    zoned loopback socket cluster — both under hierarchical gossip —
+    converges to identical stores."""
+    from repro.topology import Topology
+    from repro.core import hierarchical_policy
+
+    schedule = _schedule()
+    ids = ["gw0", "gw1", "gw2"]
+    topo = Topology.zoned(ids, 3)          # one member per zone
+    policy = lambda: hierarchical_policy(topo, base="bp+rr")
+
+    sim = Simulator(NetConfig(seed=0), topology=topo)
+    sim_nodes = [sim.add_node(default_replica_factory(policy=policy)(
+        i, [j for j in ids if j != i])) for i in ids]
+    for who, key, val in schedule:
+        sim_nodes[who].update(key, MVRegister, "write_delta",
+                              ids[who], val)
+    run_to_convergence(sim, sim_nodes, interval=1.0, max_time=60_000)
+    assert converged(sim_nodes)
+    assert sim.stats.cross_zone_bytes() > 0   # zones actually traded
+
+    async def scenario():
+        nodes = await start_cluster(
+            3, transport="udp", tick=0.03, start_gossip=False, seed=31,
+            topology=topo,
+            replica_factory=default_replica_factory(policy=policy))
+        try:
+            for who, key, val in schedule:
+                nodes[who].update(key, MVRegister, "write_delta",
+                                  ids[who], val)
+            await start_gossip(nodes)
+            await wait_converged(nodes, timeout=30.0)
+            return [n.X for n in nodes], [n.stats for n in nodes]
+        finally:
+            await stop_cluster(nodes)
+
+    socket_states, stats = asyncio.run(scenario())
+    for xs in socket_states:
+        assert xs == sim_nodes[0].X
+    assert sum(s.cross_zone_bytes() for s in stats) > 0
+
+
+def test_socket_zoned_cluster_only_relays_cross_zones():
+    """On a 3-zone × 2 socket cluster under hierarchical gossip, every
+    frame is classed, and cross-zone bytes originate from the elected
+    relays only — non-relay members push intra-zone."""
+    from repro.topology import Topology
+    from repro.core import hierarchical_policy
+
+    ids = [f"gw{k}" for k in range(6)]
+    topo = Topology.zoned(ids, 3)
+    relays = {topo.relay(z, ids) for z in topo.zone_names(ids)}
+    assert len(relays) == 3
+
+    async def scenario():
+        nodes = await start_cluster(
+            6, transport="udp", tick=0.03, seed=47, topology=topo,
+            start_gossip=False,
+            replica_factory=default_replica_factory(
+                policy=lambda: hierarchical_policy(topo)))
+        try:
+            for i, n in enumerate(nodes):
+                n.update(f"k{i}", MVRegister, "write_delta", n.id, i)
+            await start_gossip(nodes)
+            await wait_converged(nodes, timeout=30.0)
+            # a couple of extra ticks so in-flight digests are counted
+            await asyncio.sleep(0.2)
+            return {n.id: n.stats for n in nodes}
+        finally:
+            await stop_cluster(nodes)
+
+    stats = asyncio.run(scenario())
+    for nid, s in stats.items():
+        assert s.bytes_by_class, f"{nid}: no frames were link-classed"
+        if nid in relays:
+            assert s.cross_zone_bytes() > 0, f"relay {nid} never crossed"
+        else:
+            assert s.cross_zone_bytes() == 0, (
+                f"non-relay {nid} sent cross-zone bytes: "
+                f"{s.bytes_by_class}")
+
+
+def test_socket_session_ttl_reaper_quorum_over_udp():
+    """--session-ttl in socket mode: full-replication KeyOwnership +
+    ReaperProtocol threaded through GossipNode — expired session keys
+    are tombstoned on every member via reap/reap-ack frames over real
+    UDP, exactly the sim-mode lifecycle story."""
+    from repro.lifecycle import ReaperProtocol
+    from repro.sync import KeyOwnership
+    from repro.core.propagation import stable_seed
+
+    ids = [f"gw{k}" for k in range(3)]
+    ownership = KeyOwnership(ids, replication=len(ids))
+
+    def factory(node_id, neighbors):
+        r = StoreReplica(node_id, list(neighbors), causal=True,
+                         policy=make_policy("bp+rr+digest-sync:4"),
+                         rng=random.Random(stable_seed(node_id)),
+                         wire=WireCodec(), ownership=ownership, ttl=0.8)
+        ReaperProtocol(r, ownership, grace=0.2, retry=0.3)
+        return r
+
+    async def scenario():
+        import time as _time
+        nodes = await start_cluster(3, replica_factory=factory, tick=0.05,
+                                    seed=53)
+        try:
+            for i, n in enumerate(nodes):
+                n.update(f"sess{i}", MVRegister, "write_delta", n.id,
+                         "done")
+            await wait_converged(nodes, timeout=20.0)
+
+            def reaped():
+                return all(len(n.X.tombstoned_keys()) == 3
+                           and not n.X.keys() for n in nodes)
+            t0 = _time.monotonic()
+            while not reaped() and _time.monotonic() - t0 < 20.0:
+                for n in nodes:
+                    n.check_healthy()
+                await asyncio.sleep(0.1)
+            assert reaped(), (
+                "expired keys not tombstoned everywhere: "
+                + "; ".join(f"{n.id}:{sorted(n.X.keys())}" for n in nodes))
+            # the quorum ran over the wire: reap frames were exchanged
+            assert sum(n.stats.by_kind.get("reap", 0) for n in nodes) > 0
+            assert sum(n.stats.by_kind.get("reap-ack", 0)
+                       for n in nodes) > 0
+        finally:
+            await stop_cluster(nodes)
+
     asyncio.run(scenario())

@@ -1,0 +1,452 @@
+"""Topology layer tests: link classes, zone-spreading rendezvous
+ownership, hierarchical gossip, relay election + failover.
+
+The load-bearing properties:
+
+* link classification is a pure function of the two endpoint zones
+  (same zone → intra, same region → inter, else wan);
+* zone-spread ownership puts every key's write set across ≥ 2 failure
+  domains whenever ≥ 2 zones exist (and ``replication ≥ 2``), degrades
+  to *exactly* flat rendezvous ownership on a single zone, and keeps
+  the minimal-reshuffle property under worker join/leave;
+* hierarchical gossip converges (Def. 6: relayed digest routing is
+  join-equivalent), routes cross-zone traffic through elected relays
+  only, and ships strictly fewer cross-zone bytes than the flat mesh on
+  an identical seeded workload;
+* killing a zone's relay mid-run elects a new one (HRW over the live
+  set — no protocol, no extra state) and the zone still converges;
+* a zone partition heals: writes made on both sides while a zone was
+  cut off converge after the window closes.
+"""
+
+import random
+
+import pytest
+
+from repro.core import (Compose, GCounter, MVRegister, NetConfig,
+                        Simulator, StoreReplica, converged,
+                        hierarchical_policy, make_policy,
+                        run_to_convergence)
+from repro.core.hiergossip import HierarchicalGossip
+from repro.sync import KeyOwnership, ShardByKey, owners_for_key
+from repro.topology import (DEFAULT_PROFILES, INTER, INTRA, WAN,
+                            LinkProfile, Topology, hrw_score, link_class,
+                            parse_zone_map, relay_for, zone_region)
+
+
+# ---------------------------------------------------------------------------
+# Link classes + construction helpers
+# ---------------------------------------------------------------------------
+
+def test_zone_region_and_link_class():
+    assert zone_region("eu/a") == "eu"
+    assert zone_region("z0") == "z0"            # bare zone = own region
+    assert link_class("eu/a", "eu/a") == INTRA
+    assert link_class("eu/a", "eu/b") == INTER
+    assert link_class("eu/a", "us/a") == WAN
+    assert link_class("z0", "z1") == WAN        # bare zones are WAN apart
+
+
+def test_topology_zone_lookup_and_links():
+    topo = Topology({"a": "eu/x", "b": "eu/y", "c": "us/x"})
+    assert topo.zone("a") == "eu/x"
+    assert topo.zone("stranger") == topo.default_zone
+    assert topo.link_class("a", "b") == INTER
+    assert topo.link_class("a", "c") == WAN
+    assert topo.link_class("a", "a") == INTRA
+    assert topo.byte_cost("a", "c") == 1.0      # no profiles attached
+    zoned = Topology({"a": "eu/x", "c": "us/x"},
+                     profiles=DEFAULT_PROFILES)
+    assert zoned.byte_cost("a", "c") == DEFAULT_PROFILES[WAN].byte_cost
+    with pytest.raises(ValueError, match="unknown link class"):
+        Topology({}, profiles={"submarine": LinkProfile()})
+
+
+def test_topology_zoned_round_robin_and_flat():
+    ids = [f"w{k}" for k in range(7)]
+    topo = Topology.zoned(ids, 3)
+    by_zone = topo.by_zone(ids)
+    assert set(by_zone) == {"z0", "z1", "z2"}
+    assert sum(len(ws) for ws in by_zone.values()) == 7
+    # deterministic in worker order, balanced within 1
+    sizes = sorted(len(ws) for ws in by_zone.values())
+    assert sizes[-1] - sizes[0] <= 1
+    flat = Topology.flat(ids)
+    assert flat.zone_names(ids) == (flat.default_zone,)
+    with pytest.raises(ValueError, match="at least one zone"):
+        Topology.zoned(ids, 0)
+
+
+def test_parse_zone_map():
+    assert parse_zone_map("gw0=eu/a, gw1=eu/b") == {"gw0": "eu/a",
+                                                    "gw1": "eu/b"}
+    assert parse_zone_map({"a": "z"}) == {"a": "z"}
+    assert parse_zone_map(None) == {}
+    with pytest.raises(ValueError, match="ID=ZONE"):
+        parse_zone_map("gw0")
+
+
+def test_relay_election_is_deterministic_and_zone_local():
+    ids = [f"w{k}" for k in range(9)]
+    topo = Topology.zoned(ids, 3)
+    for z in topo.zone_names(ids):
+        r = topo.relay(z, ids)
+        assert r in topo.members(z, ids)
+        assert topo.relay(z, list(reversed(ids))) == r   # order-blind
+        # HRW: the relay is the zone's max scorer on the zone's key
+        assert hrw_score(r, f"relay:{z}") == max(
+            hrw_score(m, f"relay:{z}") for m in topo.members(z, ids))
+    assert topo.relay("z0", []) is None
+    assert relay_for("z9", ids, topo.zone) is None       # empty zone
+
+
+def test_relay_failover_is_removal_from_live_set():
+    ids = [f"w{k}" for k in range(9)]
+    topo = Topology.zoned(ids, 3)
+    old = topo.relay("z0", ids)
+    live = [w for w in ids if w != old]
+    new = topo.relay("z0", live)
+    assert new is not None and new != old
+    assert topo.zone(new) == "z0"
+
+
+# ---------------------------------------------------------------------------
+# Zone-spreading rendezvous ownership (seeded property loops)
+# ---------------------------------------------------------------------------
+
+def _keys(rng, n=40):
+    return [f"key{rng.randrange(10_000)}" for _ in range(n)]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("n_zones", [2, 3, 4])
+def test_write_set_crosses_two_zones_whenever_possible(seed, n_zones):
+    rng = random.Random(seed)
+    n = rng.randrange(n_zones, 13)
+    ids = [f"w{k}" for k in range(n)]
+    topo = Topology.zoned(ids, n_zones)
+    own = KeyOwnership(ids, replication=min(3, n), topology=topo)
+    for key in _keys(rng):
+        owners = own.owners(key)
+        assert len(owners) == min(3, n)
+        assert len(set(owners)) == len(owners)
+        zones = {topo.zone(w) for w in owners}
+        if own.replication >= 2 and len(topo.zone_names(ids)) >= 2:
+            assert len(zones) >= 2, (key, owners, zones)
+
+
+@pytest.mark.parametrize("seed", [3, 4])
+def test_single_zone_ownership_is_exactly_flat(seed):
+    rng = random.Random(seed)
+    ids = [f"w{k}" for k in range(rng.randrange(2, 9))]
+    flat = KeyOwnership(ids, replication=2, read_replication=4)
+    one = KeyOwnership(ids, replication=2, read_replication=4,
+                       topology=Topology.flat(ids))
+    none = KeyOwnership(ids, replication=2, read_replication=4,
+                        topology=None)
+    for key in _keys(rng):
+        assert one.owners(key) == flat.owners(key)
+        assert one.readers(key) == flat.readers(key)
+        assert none.owners(key) == flat.owners(key)
+        assert flat.owners(key) == owners_for_key(key, ids, 2)
+
+
+@pytest.mark.parametrize("seed", [5, 6, 7])
+def test_join_leave_reshuffle_is_minimal(seed):
+    """A key's write set changes on a membership change only when the
+    changed worker itself sits in the (new/old) rendezvous prefix or
+    write set — rendezvous minimal disruption, preserved by the
+    zone-spread swap (the swap target is rank-maximal among other-zone
+    workers, so only the joiner/leaver can displace it)."""
+    rng = random.Random(seed)
+    n = rng.randrange(5, 12)
+    ids = [f"w{k}" for k in range(n)]
+    topo = Topology.zoned(ids, 3)
+    r = 3
+    own = KeyOwnership(ids, replication=r, topology=topo)
+    keys = _keys(rng, 60)
+    before = {k: own.owners_among(k, ids) for k in keys}
+
+    joiner = "w_new"
+    topo.zones[joiner] = f"z{rng.randrange(3)}"
+    with_j = sorted([*ids, joiner])
+    moved = 0
+    for k in keys:
+        after = own.owners_among(k, with_j)
+        if after != before[k]:
+            moved += 1
+            prefix = owners_for_key(k, with_j, r)
+            assert joiner in set(prefix) | set(after), (
+                k, before[k], after)
+    assert moved < len(keys)      # a join never reshuffles everything
+
+    leaver = rng.choice(ids)
+    without_l = [w for w in ids if w != leaver]
+    for k in keys:
+        after = own.owners_among(k, without_l)
+        if after != before[k]:
+            prefix = owners_for_key(k, ids, r)
+            assert leaver in set(prefix) | set(before[k]), (
+                k, before[k], after)
+
+
+def test_read_extension_prefers_zone_coverage():
+    ids = [f"w{k}" for k in range(9)]
+    topo = Topology.zoned(ids, 3)
+    own = KeyOwnership(ids, replication=2, read_replication=3,
+                       topology=topo)
+    rng = random.Random(11)
+    for key in _keys(rng):
+        readers = own.readers(key)[:3]
+        assert len({topo.zone(w) for w in readers}) == 3, (key, readers)
+
+
+def test_relays_buffer_and_route_zone_mates_reads():
+    ids = [f"w{k}" for k in range(6)]
+    topo = Topology.zoned(ids, 3)
+    own = KeyOwnership(ids, replication=2, topology=topo)
+    relays = own.relays()
+    assert set(relays) == {"z0", "z1", "z2"}
+    rng = random.Random(13)
+    for key in _keys(rng, 20):
+        for z, relay in relays.items():
+            zone_reads = any(own.reads(m, key)
+                             for m in topo.members(z, ids))
+            assert own.routes_pull(relay, key) == (
+                own.reads(relay, key) or zone_reads)
+            assert own.buffers(relay, key) == (
+                own.replicates(relay, key) or zone_reads)
+        for w in ids:
+            if w not in relays.values():
+                assert own.routes_pull(w, key) == own.reads(w, key)
+                assert own.buffers(w, key) == own.replicates(w, key)
+
+
+# ---------------------------------------------------------------------------
+# Simulator: per-class link conditions + zone partitions
+# ---------------------------------------------------------------------------
+
+def test_simulator_classes_bytes_and_bills_wan():
+    ids = ["a", "b", "c"]
+    topo = Topology.zoned(ids, 3, profiles=DEFAULT_PROFILES)
+    sim = Simulator(NetConfig(seed=0), topology=topo)
+    nodes = [sim.add_node(StoreReplica(
+        i, [j for j in ids if j != i], causal=True,
+        policy=make_policy("bp+rr"), rng=random.Random(1))) for i in ids]
+    nodes[0].update("k", GCounter, "inc_delta", "a")
+    run_to_convergence(sim, nodes, interval=1.0, max_time=60_000)
+    assert converged(nodes)
+    # one worker per zone: every link is cross-zone (bare zones → wan)
+    assert set(sim.stats.bytes_by_class) == {WAN}
+    assert sim.stats.cross_zone_bytes() == sim.stats.bytes_sent
+    # the cost model bills wan bytes at the wan multiplier
+    assert sim.stats.link_cost == pytest.approx(
+        sim.stats.bytes_sent * DEFAULT_PROFILES[WAN].byte_cost)
+
+
+def test_zone_partition_requires_topology_and_nonempty_sides():
+    sim = Simulator(NetConfig(seed=0))
+    with pytest.raises(ValueError, match="topology"):
+        sim.add_zone_partition(0, 1, "z0")
+    topo = Topology.zoned(["a", "b"], 2)
+    sim2 = Simulator(NetConfig(seed=0), topology=topo)
+    sim2.add_node(StoreReplica("a", ["b"], causal=True))
+    sim2.add_node(StoreReplica("b", ["a"], causal=True))
+    with pytest.raises(ValueError, match="empty side"):
+        sim2.add_zone_partition(0, 1, "z9")
+    sim2.add_zone_partition(0, 1, "z0")      # both sides populated: ok
+    assert sim2.partitions
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical gossip end-to-end (sim)
+# ---------------------------------------------------------------------------
+
+def _zoned_cluster(n=9, n_zones=3, seed=1, policy=None, topo=None,
+                   profiles=None):
+    ids = [f"w{k}" for k in range(n)]
+    topo = topo or Topology.zoned(ids, n_zones, profiles=profiles)
+    sim = Simulator(NetConfig(seed=seed), topology=topo)
+    make = policy or (lambda: hierarchical_policy(topo, inter_every=4))
+    nodes = [sim.add_node(StoreReplica(
+        i, [j for j in ids if j != i], causal=True, policy=make(),
+        rng=random.Random(seed + 1))) for i in ids]
+    return topo, sim, ids, nodes
+
+
+def _workload(sim, nodes, rng, n_writes=40, n_keys=8):
+    """Writes spread across live gossip rounds (schedules anti-entropy
+    up front, compatible with a later ``run_to_convergence`` call)."""
+    for n in nodes:
+        sim.every(1.0, n.on_periodic)
+        sim.every(7.0, n.gc_deltas)
+    sim._ae_scheduled = {n.id for n in nodes}
+    for t in range(n_writes):
+        n = rng.choice(nodes)
+        n.update(f"k{t % n_keys}", GCounter, "inc_delta", n.id)
+        sim.run_for(1.0)
+    return n_writes
+
+
+def test_hierarchical_gossip_converges_and_beats_flat_on_wan_bytes():
+    results = {}
+    for label, hier in (("flat", False), ("hier", True)):
+        topo, sim, ids, nodes = _zoned_cluster(
+            seed=2, policy=(None if hier
+                            else (lambda: make_policy("bp+rr"))))
+        writes = _workload(sim, nodes, random.Random(3))
+        run_to_convergence(sim, nodes, interval=1.0, max_time=60_000)
+        assert converged(nodes)
+        total = sum(nodes[0].get(f"k{j}").value() for j in range(8))
+        assert total == writes
+        results[label] = sim.stats
+    assert results["hier"].cross_zone_bytes() \
+        < results["flat"].cross_zone_bytes()
+
+
+def test_hierarchical_gossip_only_relays_cross_zones():
+    topo, sim, ids, nodes = _zoned_cluster(seed=5)
+    relays = {topo.relay(z, ids) for z in topo.zone_names(ids)}
+    _workload(sim, nodes, random.Random(5))
+    run_to_convergence(sim, nodes, interval=1.0, max_time=60_000)
+    assert converged(nodes)
+    # replay target selection: only relays ever address other zones
+    for n in nodes:
+        targets = n.policy.targets(n, list(n.neighbors))
+        cross = [t for t in targets if topo.zone(t) != topo.zone(n.id)]
+        if n.id in relays:
+            assert cross and all(t in relays for t in cross)
+        else:
+            assert not cross
+
+
+def test_hierarchical_gossip_gc_with_single_member_zone():
+    """A single-member zone has no intra-zone push peers, so no acks
+    ever arrive — the ack_peers hook must let the buffer clear instead
+    of pinning it forever (digest-sync is the repair path)."""
+    topo, sim, ids, nodes = _zoned_cluster(n=3, n_zones=3, seed=7)
+    _workload(sim, nodes, random.Random(7), n_writes=20)
+    run_to_convergence(sim, nodes, interval=1.0, max_time=60_000)
+    assert converged(nodes)
+    for n in nodes:
+        n.gc_deltas()
+        assert not n.entries, (n.id, len(n.entries))
+
+
+def test_zone_partition_heals_and_converges():
+    topo, sim, ids, nodes = _zoned_cluster(seed=9,
+                                           profiles=DEFAULT_PROFILES)
+    rng = random.Random(9)
+    _workload(sim, nodes, rng, n_writes=15)
+    # cut z1 off for a window; write on BOTH sides meanwhile
+    t0 = sim.time
+    sim.add_zone_partition(t0, t0 + 30.0, "z1")
+    inside = [n for n in nodes if topo.zone(n.id) == "z1"]
+    outside = [n for n in nodes if topo.zone(n.id) != "z1"]
+    for t in range(10):
+        a = inside[t % len(inside)]
+        a.update("cut", GCounter, "inc_delta", a.id)
+        b = outside[t % len(outside)]
+        b.update("cut", GCounter, "inc_delta", b.id)
+        sim.run_for(2.0)
+    sim.run_until(t0 + 30.0)                 # heal
+    deadline = sim.time + 10_000
+    while sim.time < deadline and not converged(nodes):
+        sim.run_for(5.0)
+    assert converged(nodes)
+    assert nodes[0].get("cut").value() == 20   # no write lost on either side
+
+
+def test_relay_failover_mid_run_zone_still_converges():
+    """Kill z0's relay mid-run: the survivors prune it from their
+    neighbor lists (elastic membership), HRW over the live set elects a
+    new z0 relay, and cross-zone digest-sync keeps the zone converging."""
+    topo, sim, ids, nodes = _zoned_cluster(seed=11)
+    rng = random.Random(11)
+    _workload(sim, nodes, rng, n_writes=15)
+    run_to_convergence(sim, nodes, interval=1.0, max_time=60_000)
+    assert converged(nodes)
+
+    old = topo.relay("z0", ids)
+    live_ids = [i for i in ids if i != old]
+    new = topo.relay("z0", live_ids)
+    assert new != old and topo.zone(new) == "z0"
+
+    by_id = {n.id: n for n in nodes}
+    by_id[old].alive = False                 # crash, never recovers
+    survivors = [n for n in nodes if n.id != old]
+    for n in survivors:
+        n.neighbors.remove(old)              # membership eviction
+        n.prune_departed()
+    # the new relay is what the *policy* now elects on every survivor
+    for n in survivors:
+        hier = n.policy.policies[-1]
+        assert isinstance(hier, HierarchicalGossip)
+        if topo.zone(n.id) != "z0":
+            continue
+        cross = hier.relay_targets(n, list(n.neighbors))
+        if n.id == new:
+            assert cross and all(topo.zone(t) != "z0" for t in cross)
+        else:
+            assert cross == []
+    # writes born in z0 after the failover still reach every zone
+    z0_survivors = [n for n in survivors if topo.zone(n.id) == "z0"]
+    for t in range(10):
+        n = z0_survivors[t % len(z0_survivors)]
+        n.update("post", GCounter, "inc_delta", n.id)
+        sim.run_for(0.5)
+    run_to_convergence(sim, survivors, interval=1.0, max_time=60_000)
+    assert converged(survivors)
+    assert survivors[0].get("post").value() == 10
+
+
+def test_hierarchical_composes_with_shard_by_key():
+    """HierarchicalGossip × ShardByKey: zone relays aggregate their
+    zone's read interest across the boundary, so every owner converges
+    per key even when the owners span zones and no raw fanout crosses."""
+    ids = [f"w{k}" for k in range(6)]
+    topo = Topology.zoned(ids, 3)
+    own = KeyOwnership(ids, replication=3, topology=topo)
+    sim = Simulator(NetConfig(seed=13), topology=topo)
+    nodes = [sim.add_node(StoreReplica(
+        i, [j for j in ids if j != i], causal=True,
+        policy=Compose(make_policy("bp+rr"), ShardByKey(own),
+                       HierarchicalGossip(topo)),
+        rng=random.Random(14), ownership=own)) for i in ids]
+    by_id = {n.id: n for n in nodes}
+    rng = random.Random(15)
+    keys = [f"k{j}" for j in range(6)]
+    for t in range(24):
+        key = keys[t % 6]
+        # clients route writes by ownership (owners_for_key), as the
+        # flat-mesh cross-zone push path is intentionally cut
+        n = by_id[rng.choice(own.owners(key))]
+        n.update(key, MVRegister, "write_delta", n.id, f"v{t}")
+        if rng.random() < 0.5:
+            sim.run_for(0.4)
+
+    def settled():
+        for k in keys:
+            vals = [by_id[w].get(k, MVRegister).read()
+                    for w in own.owners(k)]
+            if any(v != vals[0] for v in vals[1:]):
+                return False
+        return True
+
+    for n in nodes:
+        sim.every(1.0, n.on_periodic)
+        sim.every(7.0, n.gc_deltas)
+    deadline = sim.time + 10_000
+    while sim.time < deadline and not settled():
+        sim.run_for(5.0)
+    assert settled()
+
+
+def test_hierarchical_policy_validation():
+    topo = Topology.zoned(["a", "b"], 2)
+    with pytest.raises(ValueError, match="inter_every"):
+        HierarchicalGossip(topo, inter_every=0)
+    pol = hierarchical_policy(topo, base=None)
+    assert isinstance(pol, HierarchicalGossip)
+    assert hierarchical_policy(topo).name == "bp+rr+hier"
+    assert HierarchicalGossip(topo, inter_every=3).name == "hier:3"
