@@ -59,13 +59,24 @@ def _percentile(xs: List[float], p: float) -> float:
 # ---------------------------------------------------------------------------
 
 async def _udp_loadgen(n_writes: int = 240, keyspace: int = 48,
-                       marker_every: int = 8, loss: float = 0.10
-                       ) -> Tuple[float, float, float, float, dict]:
+                       marker_every: int = 8, loss: float = 0.10,
+                       traced: bool = True
+                       ) -> Tuple[float, float, float, float, dict, dict]:
     from repro.core import MVRegister
     from repro.net import start_cluster, stop_cluster, wait_converged
+    from repro.obs import (Tracer, global_registry, marker_lag_histogram,
+                           report)
+
+    tracers: dict = {}
+
+    def tracer_factory(node_id):
+        tracers[node_id] = Tracer(node=node_id)
+        return tracers[node_id]
 
     nodes = await start_cluster(3, transport="udp", tick=0.05,
-                                loss=loss, seed=11)
+                                loss=loss, seed=11,
+                                tracer_factory=(tracer_factory if traced
+                                                else None))
     lat: List[float] = []
     pending: dict = {}
 
@@ -96,13 +107,43 @@ async def _udp_loadgen(n_writes: int = 240, keyspace: int = 48,
     assert not pending, (f"{len(pending)} markers never converged under "
                          f"{loss:.0%} UDP loss")
     await wait_converged(nodes, timeout=30.0)
+    await asyncio.sleep(0.2)                  # let trailing acks land
     stats = nodes[0].stats.summary()
     losses = sum(getattr(n.transport, "injected_losses", 0) for n in nodes)
     stats["injected_losses"] = losses
+    ids = [n.id for n in nodes]
+    queue_drops = sum(n.stats.queue_drops for n in nodes)
     await stop_cluster(nodes)
     thr = n_writes / write_wall
+
+    obs = {}
+    if traced:
+        # the marker lags ARE per-key replication lag: publish them on
+        # the process-wide registry (run.py --json snapshots it per
+        # suite), alongside the suite's shed-frame total
+        reg = global_registry()
+        child = marker_lag_histogram(reg, node="bench_net")
+        for v in lat:
+            child.observe(v)
+        reg.counter("repro_net_queue_drops_total",
+                    "frames shed by bounded send queues",
+                    ("node",)).labels("bench_net").set_total(queue_drops)
+        # the analyzer closes the loop: a converged cluster's trace must
+        # be anomaly-free, and the redundancy ratio quantifies what the
+        # shipping policy paid over the minimum
+        rep = report(list(tracers.values()), expect_converged=ids)
+        assert rep["anomalies"].get("ship_without_join", 0) == 0, \
+            rep["anomaly_list"]
+        assert rep["anomaly_list"] == [], rep["anomaly_list"]
+        assert rep["unconverged_keys"] == {}, rep["unconverged_keys"]
+        reg.gauge("repro_bench_redundancy_ratio",
+                  "shipped bytes / state-changing joined bytes",
+                  ("suite",)).labels("net").set(rep["redundancy"]["ratio"])
+        obs = {"redundancy_ratio": rep["redundancy"]["ratio"],
+               "mean_rounds": rep["mean_rounds"],
+               "mean_lag_s": rep["mean_lag_s"]}
     return thr, _percentile(lat, 0.50), _percentile(lat, 0.99), \
-        write_wall, stats
+        write_wall, stats, obs
 
 
 # ---------------------------------------------------------------------------
@@ -251,14 +292,16 @@ def _process_cluster(sessions: int = 24, loss: float = 0.10,
 def run() -> List[Tuple[str, float, str]]:
     rows: List[Tuple[str, float, str]] = []
 
-    thr, p50, p99, wall, stats = asyncio.run(_udp_loadgen())
+    thr, p50, p99, wall, stats, obs = asyncio.run(_udp_loadgen())
     assert p99 < 10.0, f"p99 convergence latency {p99:.2f}s under loss"
     rows.append(("net_udp_loadgen", wall * 1e6 / 240,
                  f"thr={thr:.0f}w/s p50={p50*1e3:.0f}ms "
                  f"p99={p99*1e3:.0f}ms loss=0.10 "
                  f"lost_datagrams={stats['injected_losses']} "
-                 f"queue_drops={stats['queue_drops']} all markers "
-                 f"converged"))
+                 f"queue_drops={stats['queue_drops']} "
+                 f"redundancy={obs['redundancy_ratio']:.2f} "
+                 f"rounds={obs['mean_rounds']:.1f} all markers "
+                 f"converged, trace anomaly-free"))
 
     catchup_s, catchup_b, full_b, ratio = asyncio.run(_tcp_kill_restart())
     assert ratio <= 0.25, (

@@ -145,6 +145,7 @@ def _sim_partition_heal() -> Tuple[float, int]:
 def _socket_wan_bytes(n=6, n_writes=36) -> Tuple[float, dict]:
     from repro.net.node import (start_cluster, start_gossip,
                                 stop_cluster, wait_converged)
+    from repro.obs import Tracer, report
 
     ids = [f"gw{k}" for k in range(n)]
     topo = Topology.zoned(ids, N_ZONES)
@@ -155,19 +156,37 @@ def _socket_wan_bytes(n=6, n_writes=36) -> Tuple[float, dict]:
     async def one(hier: bool) -> dict:
         policy = ((lambda: hierarchical_policy(topo, inter_every=4))
                   if hier else "bp+rr")
+        # trace the hierarchical run: relayed digest routing must still
+        # produce an anomaly-free trace (every write joined everywhere)
+        tracers: dict = {}
+
+        def tracer_factory(node_id):
+            tracers[node_id] = Tracer(node=node_id)
+            return tracers[node_id]
+
         nodes = await start_cluster(n, transport="udp", tick=0.03,
                                     policy=policy, topology=topo,
-                                    start_gossip=False, seed=43)
+                                    start_gossip=False, seed=43,
+                                    tracer_factory=(tracer_factory
+                                                    if hier else None))
         try:
             for who, key, val in schedule:
                 nodes[who].update(key, MVRegister, "write_delta",
                                   ids[who], val)
             await start_gossip(nodes)
             await wait_converged(nodes, timeout=60.0)
-            return {
+            await asyncio.sleep(0.2)          # let trailing acks land
+            out = {
                 "wan": sum(n_.stats.cross_zone_bytes() for n_ in nodes),
                 "total": sum(n_.stats.bytes_sent for n_ in nodes),
             }
+            if tracers:
+                rep = report(list(tracers.values()), expect_converged=ids)
+                assert rep["anomaly_list"] == [], rep["anomaly_list"]
+                assert rep["unconverged_keys"] == {}, \
+                    rep["unconverged_keys"]
+                out["redundancy"] = rep["redundancy"]["ratio"]
+            return out
         finally:
             await stop_cluster(nodes)
 
@@ -179,7 +198,8 @@ def _socket_wan_bytes(n=6, n_writes=36) -> Tuple[float, dict]:
         f"socket mode: hierarchy must beat the flat mesh on cross-zone "
         f"bytes: {hier['wan']} vs {flat['wan']}")
     return wall, {"flat_wan": flat["wan"], "hier_wan": hier["wan"],
-                  "saving": 1 - hier["wan"] / flat["wan"]}
+                  "saving": 1 - hier["wan"] / flat["wan"],
+                  "redundancy": hier.get("redundancy")}
 
 
 # ---------------------------------------------------------------------------
@@ -204,7 +224,9 @@ def run() -> List[Tuple[str, float, str]]:
     rows.append(("topo_socket_wan_bytes", wall * 1e6,
                  f"6-node udp 3-zone hier_wan={d['hier_wan']}B "
                  f"flat_wan={d['flat_wan']}B saving={d['saving']:.0%} "
-                 f"(assert hier<flat over real sockets)"))
+                 f"hier_redundancy={d['redundancy']:.2f} "
+                 f"(assert hier<flat over real sockets, trace "
+                 f"anomaly-free)"))
     return rows
 
 

@@ -35,12 +35,19 @@ Prints ``name,us_per_call,derived`` CSV:
                             mesh at equal workload in sim AND over real
                             loopback sockets; zone partition heals with
                             no write lost
+  bench_obs                 observability: tracing overhead within 10%
+                            of untraced throughput, 3-process
+                            serve.py --metrics cluster scraped over
+                            sidecar HTTP, trace-analyzer redundancy +
+                            convergence rollup with zero anomalies
   bench_roofline            per-(arch × shape × mesh) roofline rows from
                             the dry-run artifacts (run dryrun first)
 
 ``--json [out.json]`` additionally writes a machine-readable artifact
 (name → {us_per_call, derived}, stamped with the git revision and
-per-suite wall times and kernel-launch counts) so the perf trajectory is
+per-suite wall times, kernel-launch counts, and — per suite — the obs
+registry snapshot the suite populated: marker replication lags, queue
+drops, redundancy-ratio gauges) so the perf trajectory is
 recorded per-commit; a
 bare ``--json`` writes ``BENCH_tier1.json`` in the current directory,
 which is the repo root in CI (the workflow uploads it). ``--only a,b``
@@ -86,8 +93,8 @@ def main(argv=None) -> None:
 
     from . import (bench_antientropy, bench_dots, bench_kernels,
                    bench_lifecycle, bench_message_complexity, bench_net,
-                   bench_roofline, bench_store, bench_tensor_sync,
-                   bench_topology, bench_wire)
+                   bench_obs, bench_roofline, bench_store,
+                   bench_tensor_sync, bench_topology, bench_wire)
 
     modules = [
         ("message_complexity", bench_message_complexity),
@@ -100,6 +107,7 @@ def main(argv=None) -> None:
         ("dots", bench_dots),
         ("topology", bench_topology),
         ("net", bench_net),
+        ("obs", bench_obs),
         ("roofline", bench_roofline),
     ]
     if args.only:
@@ -114,17 +122,25 @@ def main(argv=None) -> None:
         from repro.kernels.ops import counters as _kernel_counters
     except Exception:  # pragma: no cover - partial installs
         _kernel_counters = None
+    try:        # per-suite metrics snapshots from the obs registry
+        from repro.obs import reset_global_registry as _reset_registry
+    except Exception:  # pragma: no cover - partial installs
+        _reset_registry = None
 
     print("name,us_per_call,derived")
     results = {}
     suite_wall = {}
     suite_launches = {}
+    suite_metrics = {}
     failures = 0
     run_t0 = time.perf_counter()
     for name, mod in modules:
         t0 = time.perf_counter()
         snap = (_kernel_counters.snapshot() if _kernel_counters is not None
                 else None)
+        # each suite gets a fresh process-wide registry, so its snapshot
+        # (marker lags, queue drops, redundancy gauges) is per-suite
+        reg = _reset_registry() if _reset_registry is not None else None
         try:
             rows = mod.run()
         except Exception as e:  # report, keep going
@@ -143,6 +159,10 @@ def main(argv=None) -> None:
         suite_wall[name] = round(dt, 3)
         if snap is not None:
             suite_launches[name] = _kernel_counters.since(snap)["launches"]
+        if reg is not None:
+            metrics = json.loads(reg.render_json())   # NaN/Inf cleaned
+            if metrics:
+                suite_metrics[name] = metrics
         print(f"# {name} done in {dt:.1f}s", file=sys.stderr)
     if args.json:
         with open(args.json, "w") as f:
@@ -150,6 +170,7 @@ def main(argv=None) -> None:
                        "wall_time_s": round(time.perf_counter() - run_t0, 3),
                        "suite_wall_s": suite_wall,
                        "suite_launch_count": suite_launches,
+                       "suite_metrics": suite_metrics,
                        "suites": [n for n, _ in modules],
                        "failures": failures,
                        "results": results}, f, indent=1, allow_nan=False)

@@ -25,7 +25,7 @@ device. Benchmarks snapshot/diff the counters around each round.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -61,17 +61,23 @@ class KernelCounters:
     every *numpy* operand handed to a launch (device-resident jax.Array
     operands cost nothing — that is the resident store's whole claim).
     ``d2h_bytes`` counts bytes explicitly pulled back to host
-    (:meth:`count_d2h` — spills, ranking results). Snapshot/diff around
-    a round to measure its cost; ``benchmarks/run.py --json`` records
-    the per-suite launch totals.
+    (:meth:`count_d2h` — spills, ranking results).
+
+    The counters are monotone for the process lifetime and are read by
+    **snapshot-and-diff only** (:meth:`snapshot` / :meth:`since`): a
+    global reset would race every other measurement window sharing the
+    process — two ``GossipNode`` tick handlers interleaved on one event
+    loop, a bench suite wrapping a cluster — silently corrupting
+    whichever window the reset landed inside. Diffing two snapshots is
+    interleaving-safe (each window sees exactly its own delta plus
+    launches genuinely concurrent with it), so there deliberately is no
+    ``reset()``; ``benchmarks/run.py --json`` records per-suite launch
+    totals this way.
     """
 
     __slots__ = ("launches", "h2d_bytes", "d2h_bytes")
 
     def __init__(self):
-        self.reset()
-
-    def reset(self) -> None:
         self.launches = 0
         self.h2d_bytes = 0
         self.d2h_bytes = 0
@@ -99,10 +105,27 @@ class KernelCounters:
 
 counters = KernelCounters()
 
+# optional process-wide launch observer (repro.obs.trace installs one):
+# called (op_name, h2d_bytes_this_launch) after the counters update
+_launch_hook: Optional[Callable[[str, int], None]] = None
 
-def _launch(*operands) -> None:
+
+def set_launch_hook(fn: Optional[Callable[[str, int], None]]) -> None:
+    """Install (or clear, with None) the process-wide launch observer."""
+    global _launch_hook
+    _launch_hook = fn
+
+
+def record_launch(name: str, *operands) -> None:
+    """Account one named kernel dispatch: bump the counters and notify
+    the launch hook. Every wrapper (and any out-of-module launch site,
+    e.g. the resident store's ranking epilogue) routes through here so
+    launches are observable by name, not just as a bare count."""
     counters.launches += 1
+    before = counters.h2d_bytes
     counters.count_h2d(*operands)
+    if _launch_hook is not None:
+        _launch_hook(name, counters.h2d_bytes - before)
 
 
 # ---------------------------------------------------------------------------
@@ -123,7 +146,7 @@ def flash_attention(q, k, v, *, scale: Optional[float] = None,
                     block_q: int = 128, block_k: int = 128,
                     interpret: bool = False):
     """Causal flash attention. q [b,h,s,hd]; k,v [b,kv,s,hd]."""
-    _launch(q, k, v)
+    record_launch("flash_attention", q, k, v)
     return _flash_attention_jit(q, k, v, scale=scale, window=window,
                                 softcap=softcap, block_q=block_q,
                                 block_k=block_k, interpret=interpret)
@@ -134,7 +157,7 @@ def flash_decode(q, k, v, q_pos, k_pos, *, scale: Optional[float] = None,
                  softcap: Optional[float] = None,
                  block_k: int = 128, interpret: bool = False):
     """One-token decode against a (ring) KV cache with slot positions."""
-    _launch(q, k, v, q_pos, k_pos)
+    record_launch("flash_decode", q, k, v, q_pos, k_pos)
     return _flash_decode_jit(q, k, v, q_pos, k_pos, scale=scale,
                              window=window, softcap=softcap,
                              block_k=block_k, interpret=interpret)
@@ -151,7 +174,7 @@ _delta_join_jit = functools.partial(
 def delta_join(a_vals, a_vers, b_vals, b_vers, *, block_n: int = 256,
                interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
     """Fused versioned-chunk LWW merge (the δ-CRDT tensor join hot loop)."""
-    _launch(a_vals, a_vers, b_vals, b_vers)
+    record_launch("delta_join", a_vals, a_vers, b_vals, b_vers)
     return _delta_join_jit(a_vals, a_vers, b_vals, b_vers, block_n=block_n,
                            interpret=interpret)
 
@@ -181,7 +204,7 @@ _chunk_digest_ref_jit = jax.jit(ref.chunk_digest_ref)
 def chunk_digest(x, *, block_n: int = 256,
                  interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
     """Per-chunk (max|x|, Σx²) in one pass — delta-selection digests."""
-    _launch(x)
+    record_launch("chunk_digest", x)
     return _chunk_digest_jit(x, block_n=block_n, interpret=interpret)
 
 
@@ -192,7 +215,7 @@ def chunk_digest_auto(x, *, block_n: int = 256
     fused dispatch either way). The digest-selection hot path calls this
     instead of paying interpret mode's per-grid-step simulation cost per
     tensor."""
-    _launch(x)
+    record_launch("chunk_digest", x)
     if use_pallas_default():
         return _chunk_digest_jit(x, block_n=block_n, interpret=False)
     return _chunk_digest_ref_jit(x)
@@ -211,7 +234,7 @@ def fused_join_digest(a_vals, a_vers, b_vals, b_vers, *,
     max|out| per chunk, Σout² per chunk)``. ``interpret=None`` (default)
     auto-dispatches — compiled Pallas on TPU, the jitted XLA oracle
     elsewhere; pass True/False to force a Pallas mode (parity tests)."""
-    _launch(a_vals, a_vers, b_vals, b_vers)
+    record_launch("fused_join_digest", a_vals, a_vers, b_vals, b_vers)
     if interpret is None:
         if use_pallas_default():
             return _fused_join_digest_jit(a_vals, a_vers, b_vals, b_vers,
@@ -235,7 +258,7 @@ def scatter_join(vals, vers, maxabs, sumsq, idx, d_vals, d_vers, *,
     :func:`fused_join_digest`. ``idx`` empty is a no-op (no launch)."""
     if int(idx.shape[0]) == 0:
         return vals, vers, maxabs, sumsq
-    _launch(vals, vers, maxabs, sumsq, idx, d_vals, d_vers)
+    record_launch("scatter_join", vals, vers, maxabs, sumsq, idx, d_vals, d_vers)
     if interpret is None:
         if use_pallas_default():
             return _scatter_join_jit(vals, vers, maxabs, sumsq, idx,

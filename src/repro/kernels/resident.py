@@ -428,7 +428,7 @@ def keep_plan(cache: ResidentColumns, budget_bytes: int
     keep: Dict[Tuple[str, str], list] = {}
     if k <= 0:
         return keep
-    ops.counters.launches += 1          # the ranking epilogue
+    ops.record_launch("keep_plan")      # the ranking epilogue
     rows = np.asarray(_topk_live(cache.sumsq, jnp.asarray(live), k))
     ops.counters.count_d2h(rows)
     starts = np.fromiter((s for _, _, s, _ in cache.layout), np.int64,

@@ -121,6 +121,14 @@ def main() -> None:
                     help="socket mode: publish a JSON heartbeat "
                          "(fingerprint, key count, byte counters) here "
                          "for the external convergence harness")
+    ap.add_argument("--metrics", action="store_true",
+                    help="socket mode: export the observability registry "
+                         "(repro.obs — replication lag, delta-buffer "
+                         "depth, per-link-class byte rates, kernel "
+                         "launches) on a loopback HTTP sidecar serving "
+                         "Prometheus text at /metrics and JSON at "
+                         "/metrics.json; --status-file heartbeats gain "
+                         "the full snapshot")
     args = ap.parse_args()
 
     if args.listen or args.peers:
@@ -410,6 +418,11 @@ def _socket_sessions(args, spec) -> None:
                           topology=topo, tick=args.tick,
                           loss=args.udp_loss, seed=args.seed)
         await node.start()
+        if args.metrics:
+            node.export_metrics()
+            maddr = await node.serve_metrics()
+            print(f"[serve.net] {spec.node_id} metrics at "
+                  f"http://{maddr}/metrics")
         ids = spec.cluster_ids
         rank, n = ids.index(spec.node_id), len(ids)
         mine = [s for s in range(n_sessions) if s % n == rank]
@@ -467,6 +480,11 @@ def _write_status(path: str, node, keys, n_sessions: int) -> None:
         "recv_bytes_by_class": node.stats.recv_bytes_by_class,
         "tombstones": len(node.X.tombstoned_keys()),
     }
+    if node.metrics_registry is not None:
+        # --metrics: the harness gets the whole registry without having
+        # to scrape the sidecar (and the sidecar address in case it does)
+        payload["metrics_addr"] = node.metrics_addr
+        payload["metrics"] = node.metrics_registry.snapshot()
     tmp = f"{path}.tmp"
     with open(tmp, "w") as f:
         json.dump(payload, f)

@@ -188,6 +188,10 @@ class ReaperProtocol:
         self.replica.operation(lambda S: LatticeStore.life_delta(
             key, tombstone((prop.epoch, prop.expiry), prop.expiry)))
         self.reaped += 1
+        tracer = getattr(self.replica, "tracer", None)
+        if tracer is not None:
+            tracer.emit("reap_commit", key=key, epoch=prop.epoch,
+                        acks=len(prop.acks))
         return True
 
     # -- message plane (routed from Replica.on_receive) ---------------------------

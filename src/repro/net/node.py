@@ -119,8 +119,12 @@ class GossipNode:
                  tick: float = 0.1, gc_every: int = 7,
                  queue_cap: int = 256, mtu: int = 1400,
                  loss: float = 0.0, dup: float = 0.0, reorder: float = 0.0,
-                 seed: int = 0):
+                 seed: int = 0,
+                 tracer: Optional[Any] = None):
         self.id = node_id
+        # structured trace bus: installed on the replica at build time
+        # (ensure_replica) and fed queue_drop events from the send path
+        self.tracer = tracer
         self.listen = listen
         # zone annotations: classify every sent/received frame's link
         # (intra / inter / wan) in the byte accounting — the socket-side
@@ -147,6 +151,11 @@ class GossipNode:
         self.addr: Optional[str] = None
         self.errors: List[BaseException] = []
         self._running = False
+        # observability surface (export_metrics / serve_metrics)
+        self.metrics_registry: Optional[Any] = None
+        self.metrics_addr: Optional[str] = None
+        self.lag_probe: Optional[Any] = None
+        self._metrics_server: Optional[Any] = None
 
     # -- what the replica sees as its "sim" -------------------------------------
     @property
@@ -174,6 +183,8 @@ class GossipNode:
         if drops:
             self.stats.queue_drops += drops
             self.stats.dropped += drops
+            if self.tracer is not None:
+                self.tracer.emit("queue_drop", dst=dst, dropped=drops)
 
     # -- lifecycle -------------------------------------------------------------
     async def bind(self) -> str:
@@ -190,6 +201,8 @@ class GossipNode:
         assert self.peers, "a gossip node needs at least one peer"
         if self.replica is None:
             self.replica = self._factory(self.id, sorted(self.peers))
+            if self.tracer is not None:
+                self.replica.tracer = self.tracer
         return self.replica
 
     async def start(self) -> None:
@@ -231,6 +244,8 @@ class GossipNode:
                     self.tick * (1.0 + self._rng.uniform(-0.1, 0.1)))
                 assert self.replica is not None
                 self.replica.on_periodic()
+                if self.lag_probe is not None:
+                    self.lag_probe.poll()   # tick-resolution ack lag
                 ticks += 1
                 if ticks % self.gc_every == 0:
                     self.replica.gc_deltas()
@@ -258,11 +273,17 @@ class GossipNode:
     # -- convenience write API ---------------------------------------------------
     def update(self, key: str, typ, mutator_name: str, *args) -> Any:
         assert isinstance(self.replica, StoreReplica)
-        return self.replica.update(key, typ, mutator_name, *args)
+        out = self.replica.update(key, typ, mutator_name, *args)
+        if self.lag_probe is not None:
+            self.lag_probe.note_write()
+        return out
 
     def operation(self, m_delta: Callable[[Any], Any]) -> Any:
         assert self.replica is not None
-        return self.replica.operation(m_delta)
+        out = self.replica.operation(m_delta)
+        if self.lag_probe is not None:
+            self.lag_probe.note_write()
+        return out
 
     @property
     def X(self):
@@ -271,6 +292,9 @@ class GossipNode:
 
     async def stop(self, *, abort: bool = False) -> None:
         self._running = False
+        if self._metrics_server is not None:
+            await self._metrics_server.stop()
+            self._metrics_server = None
         for t in self._tasks:
             t.cancel()
         for t in self._tasks:
@@ -288,6 +312,39 @@ class GossipNode:
         if self.errors:
             raise self.errors[0]
 
+    # -- observability -----------------------------------------------------------
+    def export_metrics(self, registry: Optional[Any] = None) -> Any:
+        """Wire this node into a metrics registry (default: a fresh one):
+        the transport's :class:`LinkStats` (with scrape-window byte-rate
+        gauges), per-peer replica health probes, write→fully-acked lag,
+        and the process-wide kernel counters. Returns the registry —
+        everything is collect-time, so the gossip hot path is untouched."""
+        from ..obs import AckLagProbe, Registry, ReplicaProbes
+        if registry is None:
+            registry = Registry()
+        registry.absorb_link_stats(self.stats, node=self.id,
+                                   clock=lambda: self.time)
+        registry.absorb_kernel_counters(node=self.id)
+        replica = self.ensure_replica()
+        ReplicaProbes(registry, replica, node=self.id)
+        self.lag_probe = AckLagProbe(registry, replica, node=self.id,
+                                     clock=lambda: self.time)
+        return registry
+
+    async def serve_metrics(self, registry: Optional[Any] = None, *,
+                            host: str = "127.0.0.1", port: int = 0) -> str:
+        """Start the sidecar scrape endpoint (Prometheus text at
+        ``/metrics``, JSON at ``/metrics.json``) on this node's event
+        loop; returns (and remembers, as ``metrics_addr``) its address.
+        Stopped with the node."""
+        from ..obs import MetricsServer
+        if registry is None:
+            registry = self.export_metrics()
+        self.metrics_registry = registry
+        self._metrics_server = MetricsServer(registry, host=host, port=port)
+        self.metrics_addr = await self._metrics_server.start()
+        return self.metrics_addr
+
 
 # ---------------------------------------------------------------------------
 # Cluster helpers (tests + benchmarks)
@@ -301,7 +358,9 @@ async def start_cluster(n: int, *, transport: str = "udp",
                         mtu: int = 1400, loss: float = 0.0,
                         dup: float = 0.0, reorder: float = 0.0,
                         seed: int = 0, host: str = "127.0.0.1",
-                        start_gossip: bool = True) -> List[GossipNode]:
+                        start_gossip: bool = True,
+                        tracer_factory: Optional[Callable[[str], Any]]
+                        = None) -> List[GossipNode]:
     """N in-process nodes on ephemeral loopback ports, fully meshed.
 
     Binds everyone first (so the OS assigns ports), then wires the peer
@@ -310,13 +369,17 @@ async def start_cluster(n: int, *, transport: str = "udp",
     ``topology`` annotates the members with zones: frame bytes are
     classed intra/inter/wan per link (pair with a zone-aware policy via
     ``policy``/``replica_factory`` for hierarchical gossip).
+    ``tracer_factory`` (node id → :class:`~repro.obs.Tracer`) attaches a
+    trace bus per member.
     """
     nodes = [GossipNode(f"gw{k}", f"{host}:0", transport=transport,
                         policy=policy, replica_factory=replica_factory,
                         topology=topology,
                         tick=tick, queue_cap=queue_cap, mtu=mtu,
                         loss=loss, dup=dup, reorder=reorder,
-                        seed=seed + k)
+                        seed=seed + k,
+                        tracer=(tracer_factory(f"gw{k}")
+                                if tracer_factory is not None else None))
              for k in range(n)]
     for node in nodes:
         await node.bind()

@@ -1,104 +1,10 @@
-"""Duplicate-safe distributed training metrics as δ-CRDTs.
-
-Telemetry links are the textbook case for the paper's counter example
-(§4.2): a lost or re-sent report must never lose or double-count samples.
-Each metric is a per-replica map of monotone ``(n, sum, min, max)``
-records — the per-replica record is versioned by its own sample count, so
-the join keeps the freshest record per reporter (idempotent, commutative).
-Global aggregates are exact once every replica's latest record arrives.
-"""
+"""Compatibility shim: the replicated δ-CRDT metrics moved to
+:mod:`repro.obs.registry` (the single metrics home — local process
+counters and replicated duplicate-safe aggregates are two views of one
+observability layer). Import from ``repro.obs`` in new code."""
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, Tuple
+from ..obs.registry import MetricRecord, Metrics, MetricsState
 
-from ..core.crdts import DeltaCRDT
-from ..core.dots import ReplicaId
-
-
-@dataclass(frozen=True)
-class MetricRecord:
-    n: int = 0
-    total: float = 0.0
-    min_v: float = float("inf")
-    max_v: float = float("-inf")
-
-    def observe(self, value: float, weight: int = 1) -> "MetricRecord":
-        return MetricRecord(self.n + weight, self.total + value,
-                            min(self.min_v, value), max(self.max_v, value))
-
-    def join(self, other: "MetricRecord") -> "MetricRecord":
-        # per-replica records are monotone in n: larger n subsumes
-        return self if self.n >= other.n else other
-
-
-@dataclass(frozen=True)
-class MetricsState(DeltaCRDT):
-    """metric name → replica → MetricRecord."""
-
-    entries: Tuple[Tuple[str, Tuple[Tuple[ReplicaId, MetricRecord], ...]], ...] = ()
-
-    @staticmethod
-    def bottom() -> "MetricsState":
-        return MetricsState()
-
-    def _as_dict(self) -> Dict[str, Dict[ReplicaId, MetricRecord]]:
-        return {m: dict(rs) for m, rs in self.entries}
-
-    @staticmethod
-    def _freeze(d: Dict[str, Dict[ReplicaId, MetricRecord]]) -> "MetricsState":
-        return MetricsState(tuple(sorted(
-            (m, tuple(sorted(rs.items()))) for m, rs in d.items())))
-
-    def observe_delta(self, i: ReplicaId, metric: str, value: float,
-                      weight: int = 1) -> "MetricsState":
-        cur = self._as_dict().get(metric, {}).get(i, MetricRecord())
-        return MetricsState._freeze({metric: {i: cur.observe(value, weight)}})
-
-    def observe_full(self, i: ReplicaId, metric: str, value: float,
-                     weight: int = 1) -> "MetricsState":
-        return self.join(self.observe_delta(i, metric, value, weight))
-
-    def join(self, other: "MetricsState") -> "MetricsState":
-        a = self._as_dict()
-        for m, rs in other._as_dict().items():
-            mine = a.setdefault(m, {})
-            for r, rec in rs.items():
-                mine[r] = mine[r].join(rec) if r in mine else rec
-        return MetricsState._freeze(a)
-
-    # -- aggregates -----------------------------------------------------------
-    def count(self, metric: str) -> int:
-        return sum(rec.n for rec in self._as_dict().get(metric, {}).values())
-
-    def total(self, metric: str) -> float:
-        return sum(rec.total for rec in self._as_dict().get(metric, {}).values())
-
-    def mean(self, metric: str) -> float:
-        n = self.count(metric)
-        return self.total(metric) / n if n else float("nan")
-
-    def minimum(self, metric: str) -> float:
-        vals = [rec.min_v for rec in self._as_dict().get(metric, {}).values()]
-        return min(vals) if vals else float("inf")
-
-    def maximum(self, metric: str) -> float:
-        vals = [rec.max_v for rec in self._as_dict().get(metric, {}).values()]
-        return max(vals) if vals else float("-inf")
-
-
-class Metrics:
-    """Convenience recorder for one replica."""
-
-    def __init__(self, replica: ReplicaId):
-        self.replica = replica
-        self.state = MetricsState.bottom()
-
-    def observe(self, metric: str, value: float, weight: int = 1) -> MetricsState:
-        delta = self.state.observe_delta(self.replica, metric, value, weight)
-        self.state = self.state.join(delta)
-        return delta
-
-    def merge(self, remote: MetricsState) -> None:
-        self.state = self.state.join(remote)
+__all__ = ["MetricRecord", "Metrics", "MetricsState"]

@@ -243,23 +243,36 @@ def _schedule(n_writes=36, n_keys=9, seed=29):
 
 
 def test_sim_socket_equivalence():
+    from repro.obs import Tracer, report, semantic_trace
+
     schedule = _schedule()
     ids = ["gw0", "gw1", "gw2"]
 
-    # --- simulator replay ---------------------------------------------------
+    # --- simulator replay (traced, deterministic sim clock) -----------------
     sim = Simulator(NetConfig(seed=0))
-    sim_nodes = [sim.add_node(default_replica_factory()(
-        i, [j for j in ids if j != i])) for i in ids]
+    sim_tracers = {i: Tracer(node=i, clock=lambda: sim.time) for i in ids}
+    sim_nodes = []
+    for i in ids:
+        r = default_replica_factory()(i, [j for j in ids if j != i])
+        r.tracer = sim_tracers[i]
+        sim_nodes.append(sim.add_node(r))
     for who, key, val in schedule:
         sim_nodes[who].update(key, MVRegister, "write_delta",
                               ids[who], val)
     run_to_convergence(sim, sim_nodes, interval=1.0, max_time=60_000)
     assert converged(sim_nodes)
 
-    # --- socket replay (same ids, same codec, same policy) ------------------
+    # --- socket replay (same ids, same codec, same policy, traced) ----------
+    socket_tracers = {}
+
+    def tracer_factory(node_id):
+        socket_tracers[node_id] = Tracer(node=node_id)
+        return socket_tracers[node_id]
+
     async def scenario():
         nodes = await start_cluster(3, transport="udp", tick=0.03,
-                                    start_gossip=False, seed=31)
+                                    start_gossip=False, seed=31,
+                                    tracer_factory=tracer_factory)
         try:
             for who, key, val in schedule:
                 nodes[who].update(key, MVRegister, "write_delta",
@@ -277,6 +290,20 @@ def test_sim_socket_equivalence():
     for key in {k for _, k, _ in schedule}:
         assert (socket_states[0].get(key).read()
                 == sim_nodes[0].X.get(key).read())
+
+    # the trace-equivalence contract: both replays' event streams tell
+    # the same timing-free story — per key, the same writers issuing the
+    # same write counts, converging to the same holder set — and neither
+    # trace contains a consistency anomaly
+    sim_semantic = semantic_trace(list(sim_tracers.values()))
+    sock_semantic = semantic_trace(list(socket_tracers.values()))
+    assert sim_semantic == sock_semantic
+    assert set(sim_semantic) == {k for _, k, _ in schedule}
+    assert all(rec["joined"] == ids for rec in sim_semantic.values())
+    for tracers in (sim_tracers, socket_tracers):
+        rep = report(list(tracers.values()), expect_converged=ids)
+        assert rep["anomaly_list"] == []
+        assert rep["unconverged_keys"] == {}
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,549 @@
+"""Observability subsystem tests: trace bus, metrics registry, derived
+probes, scrape surface, and the trace analyzer.
+
+The load-bearing properties:
+
+* the tracer is a bounded, sampled, optionally file-backed ring whose
+  JSONL sink round-trips through ``load_trace``; unknown event kinds
+  fail loudly at the emit site;
+* a traced simulator run produces a clean trace: writes, ships, joins
+  and acks that the analyzer can roll up with zero anomalies, a
+  redundancy ratio ≥ 1, and per-key convergence lag;
+* the registry's families render valid Prometheus text and a JSON
+  snapshot; absorbers mirror live stats objects without the call sites
+  changing; collectors run at scrape time;
+* ``ReplicaProbes`` / ``AckLagProbe`` read engine health straight off a
+  live replica (buffer depth, GC horizon age, write→acked latency);
+* kernel launches are observable by name through the process-wide hook;
+  ``KernelCounters`` is snapshot-and-diff only (no global reset);
+* the scrape sidecar serves both views over real sockets;
+* the synthetic-trace anomaly detectors fire on exactly the corrupted
+  streams they claim to catch;
+* ``sync.metrics`` is a live re-export shim over ``obs.registry``.
+"""
+
+import asyncio
+import json
+import random
+
+import pytest
+
+from repro.core import (AWORSet, MVRegister, NetConfig, Replica, Simulator,
+                        StoreReplica, converged, make_policy,
+                        run_to_convergence)
+from repro.obs import (AckLagProbe, EVENT_KINDS, MetricsServer, Registry,
+                       ReplicaProbes, Tracer, anomalies, convergence,
+                       load_trace, marker_lag_histogram, merge_events,
+                       parse_prometheus, redundancy, report, scrape,
+                       scrape_json, semantic_trace, trace_kernel_launches)
+
+
+# ---------------------------------------------------------------------------
+# Tracer mechanics
+# ---------------------------------------------------------------------------
+
+def test_tracer_ring_sink_and_clock(tmp_path):
+    t = [0.0]
+    path = str(tmp_path / "trace.jsonl")
+    with Tracer(node="a", clock=lambda: t[0], capacity=4,
+                sink=path) as tr:
+        for i in range(6):
+            t[0] = float(i)
+            tr.emit("write", keys=[f"k{i}"], tag=i)
+    evs = tr.events()
+    assert len(evs) == 4                      # ring kept the newest 4
+    assert [e["t"] for e in evs] == [2.0, 3.0, 4.0, 5.0]
+    assert [e["seq"] for e in evs] == [2, 3, 4, 5]
+    assert all(e["node"] == "a" for e in evs)
+    disk = load_trace(path)                   # the sink kept all 6
+    assert len(disk) == 6 and disk[0]["keys"] == ["k0"]
+
+
+def test_tracer_rejects_unknown_kind():
+    tr = Tracer(node="a")
+    with pytest.raises(ValueError, match="unknown trace event kind"):
+        tr.emit("delta_shiip", dst="b")
+    assert "delta_ship" in EVENT_KINDS
+
+
+def test_tracer_sampling_is_seeded():
+    def run():
+        tr = Tracer(node="a", sample=0.5, seed=7)
+        for i in range(200):
+            tr.emit("write", keys=["k"], tag=i)
+        return [e["tag"] for e in tr.events()], tr.dropped
+    kept1, dropped1 = run()
+    kept2, dropped2 = run()
+    assert kept1 == kept2 and dropped1 == dropped2    # reproducible
+    assert 0 < len(kept1) < 200 and dropped1 == 200 - len(kept1)
+
+
+def test_merge_events_orders_by_time_then_seq():
+    a, b = Tracer(node="a", clock=lambda: 1.0), Tracer(node="b",
+                                                       clock=lambda: 0.5)
+    a.emit("write", keys=["x"], tag=0)
+    a.emit("ack", src="b", tag=1)
+    b.emit("write", keys=["y"], tag=0)
+    merged = merge_events(a, b)
+    assert [e["node"] for e in merged] == ["b", "a", "a"]
+    assert [e["seq"] for e in merged if e["node"] == "a"] == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# Traced engine: simulator runs feed the analyzer
+# ---------------------------------------------------------------------------
+
+def _traced_sim(policy="bp+rr", n=3, writes=6, loss=0.2):
+    ids = [f"n{k}" for k in range(n)]
+    sim = Simulator(NetConfig(loss=loss, seed=5))
+    tracers = {i: Tracer(node=i, clock=lambda: sim.time) for i in ids}
+    nodes = [sim.add_node(StoreReplica(
+        i, [j for j in ids if j != i], causal=True,
+        policy=make_policy(policy), rng=random.Random(11),
+        tracer=tracers[i])) for i in ids]
+    for w in range(writes):
+        nodes[w % n].update(f"k{w}", MVRegister, "write_delta",
+                            ids[w % n], f"v{w}")
+        sim.run_for(0.5)
+    run_to_convergence(sim, nodes, interval=1.0)
+    assert converged(nodes)
+    return ids, nodes, list(tracers.values())
+
+
+def test_traced_sim_run_is_clean_and_converged():
+    ids, nodes, tracers = _traced_sim()
+    rep = report(tracers, expect_converged=ids)
+    assert rep["anomaly_list"] == []
+    assert rep["unconverged_keys"] == {}
+    assert rep["keys"] == 6
+    assert rep["redundancy"]["ratio"] >= 1.0
+    assert rep["redundancy"]["shipped_bytes"] > 0
+    assert rep["mean_rounds"] >= 0.0 and rep["max_lag_s"] > 0.0
+    counts = {}
+    for tr in tracers:
+        for k, v in tr.counts().items():
+            counts[k] = counts.get(k, 0) + v
+    assert counts["write"] == 6
+    assert counts["delta_ship"] > 0 and counts["delta_join"] > 0
+    assert counts["ack"] > 0                  # bp needs the ack stream
+
+
+def test_traced_sim_gc_horizon_events():
+    _, nodes, tracers = _traced_sim(writes=8)
+    for n in nodes:
+        n.gc_deltas()
+    gc = [e for tr in tracers for e in tr.events()
+          if e["kind"] == "gc_horizon_advance"]
+    assert gc, "converged buffers never reported a GC advance"
+    assert all(e["dropped"] > 0 and e["horizon"] > 0 for e in gc)
+    # the advance events account exactly for what left the buffers
+    by_node = {e["node"]: e for tr in tracers for e in tr.events()
+               if e["kind"] == "gc_horizon_advance"}
+    for n in nodes:
+        if n.id in by_node:
+            assert len(n.entries) <= by_node[n.id]["depth"]
+
+
+def test_traced_digest_sync_emits_pull_round_events():
+    _, _, tracers = _traced_sim(policy="bp+rr+digest-sync:2", writes=6)
+    counts = {}
+    for tr in tracers:
+        for k, v in tr.counts().items():
+            counts[k] = counts.get(k, 0) + v
+    assert counts.get("digest_req", 0) > 0
+    rep = report(tracers)
+    assert rep["anomaly_list"] == []
+
+
+def test_traced_reaper_lifecycle_events():
+    from repro.lifecycle import ReaperProtocol
+    from repro.sync import KeyOwnership
+
+    ids = ["n0", "n1", "n2"]
+    ownership = KeyOwnership(ids, replication=3)
+    sim = Simulator(NetConfig(seed=9))
+    tracers = {i: Tracer(node=i, clock=lambda: sim.time) for i in ids}
+    nodes = [sim.add_node(StoreReplica(
+        i, [j for j in ids if j != i], causal=True,
+        policy=make_policy("bp+rr"), rng=random.Random(13),
+        ownership=ownership, ttl=2.0, tracer=tracers[i])) for i in ids]
+    for n in nodes:
+        ReaperProtocol(n, ownership, grace=0.5, retry=1.0)
+        sim.every(1.0, n.on_periodic)
+    nodes[0].update("sess", MVRegister, "write_delta", "n0", "done")
+    sim.run_for(60.0)
+    assert all("sess" in n.X.tombstoned_keys() for n in nodes)
+    evs = merge_events(*tracers.values())
+    kinds = {e["kind"] for e in evs}
+    assert {"reap_propose", "reap_ack", "reap_commit"} <= kinds
+    commit = next(e for e in evs if e["kind"] == "reap_commit")
+    assert commit["key"] == "sess" and commit["acks"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Registry: families, rendering, collectors, absorbers
+# ---------------------------------------------------------------------------
+
+def test_registry_families_render_and_snapshot():
+    reg = Registry()
+    c = reg.counter("frames_total", "frames", ("node",))
+    c.labels("a").inc(3)
+    c.labels(node="b").inc()
+    g = reg.gauge("depth", "buffered entries")
+    g.set(4.5)
+    h = reg.histogram("lag_seconds", "lag", buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 0.5, 5.0):
+        h.observe(v)
+    text = reg.render_prometheus()
+    parsed = parse_prometheus(text)
+    assert parsed["frames_total"] == {'node="a"': 3.0, 'node="b"': 1.0}
+    assert parsed["depth"][""] == 4.5
+    assert parsed["lag_seconds_bucket"]['le="1"'] == 3.0   # cumulative
+    assert parsed["lag_seconds_bucket"]['le="+Inf"'] == 4.0
+    assert parsed["lag_seconds_count"][""] == 4.0
+    assert "# TYPE lag_seconds histogram" in text
+    snap = reg.snapshot()
+    assert snap["frames_total"] == {"a": 3.0, "b": 1.0}
+    assert snap["depth"] == 4.5
+    assert snap["lag_seconds"]["count"] == 4
+    assert h.approx_quantile(0.5) == 1.0
+    # the JSON view survives non-finite floats
+    reg.gauge("weird").set(float("inf"))
+    assert json.loads(reg.render_json())["weird"] == "inf"
+
+
+def test_registry_is_idempotent_and_rejects_redeclaration():
+    reg = Registry()
+    a = reg.counter("x_total", "x", ("node",))
+    assert reg.counter("x_total", "x", ("node",)) is a
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("x_total")
+    with pytest.raises(ValueError, match="already registered"):
+        reg.counter("x_total", "x", ("node", "peer"))
+    with pytest.raises(ValueError, match="invalid metric name"):
+        reg.counter("bad name")
+    with pytest.raises(ValueError, match="reserved"):
+        reg.histogram("h", "h", ("le",))
+    with pytest.raises(ValueError, match="counters only go up"):
+        a.labels("a").inc(-1)
+
+
+def test_registry_gauge_set_function_and_collectors():
+    reg = Registry()
+    depth = [7]
+    reg.gauge("live_depth").set_function(lambda: depth[0])
+    seen = []
+    reg.add_collector(lambda: seen.append(True))
+    snap = reg.snapshot()
+    assert snap["live_depth"] == 7.0 and seen == [True]
+    depth[0] = 9
+    assert reg.snapshot()["live_depth"] == 9.0
+
+
+def test_absorb_link_stats_publishes_totals_and_finite_rates():
+    from repro.net.stats import LinkStats
+
+    stats = LinkStats()
+    stats.record("delta", 100)
+    stats.record("digest", 40)
+    stats.record_recv("delta", 80)
+    stats.queue_drops += 2
+    clock = [100.0]
+    reg = Registry()
+    reg.absorb_link_stats(stats, node="gw0", clock=lambda: clock[0])
+    snap = reg.snapshot()
+    assert snap["repro_net_bytes_sent_total"]["gw0"] == 140.0
+    assert snap["repro_net_bytes_by_kind_total"]["gw0,delta"] == 100.0
+    assert snap["repro_net_bytes_recv_total"]["gw0"] == 80.0
+    assert snap["repro_net_queue_drops_total"]["gw0"] == 2.0
+    # rate gauges exist and are finite from the FIRST scrape on
+    assert snap["repro_net_bytes_sent_per_second"]["gw0"] == 0.0
+    stats.record("delta", 50)
+    clock[0] += 10.0
+    snap = reg.snapshot()
+    assert snap["repro_net_bytes_sent_per_second"]["gw0"] == 5.0
+    # the live stats object stayed the accumulator: no call-site churn
+    assert stats.bytes_sent == 190
+
+
+def test_absorb_crdt_metrics_surfaces_replicated_aggregates():
+    from repro.sync import Metrics
+
+    m = Metrics("r1")
+    m.observe("lat", 2.0)
+    m.observe("lat", 4.0)
+    reg = Registry()
+    reg.absorb_crdt_metrics(m, node="r1")
+    snap = reg.snapshot()
+    assert snap["repro_crdt_metric_count"]["r1,lat"] == 2.0
+    assert snap["repro_crdt_metric_sum"]["r1,lat"] == 6.0
+
+
+def test_sync_metrics_is_a_live_shim():
+    import repro.sync.metrics as legacy
+    from repro.obs import registry as home
+
+    assert legacy.Metrics is home.Metrics
+    assert legacy.MetricsState is home.MetricsState
+    assert legacy.MetricRecord is home.MetricRecord
+
+
+# ---------------------------------------------------------------------------
+# Engine probes
+# ---------------------------------------------------------------------------
+
+def test_replica_probes_read_live_engine_state():
+    ids, nodes, _ = _traced_sim(writes=4)
+    reg = Registry()
+    for n in nodes:
+        ReplicaProbes(reg, n)
+    snap = reg.snapshot()
+    assert set(snap["repro_replica_delta_buffer_depth"]) == set(ids)
+    # the gauges mirror the live engine maps exactly
+    by_id = {n.id: n for n in nodes}
+    for i in ids:
+        r = by_id[i]
+        assert snap["repro_replica_delta_buffer_depth"][i] == len(r.entries)
+        assert snap["repro_replica_counter"][i] == r.c >= 1
+        assert snap["repro_replica_rounds_total"][i] == r.rounds > 0
+        age = snap["repro_replica_gc_horizon_age"][i]
+        assert age == r.c - snap["repro_replica_gc_horizon"][i] >= 0
+    assert all(v >= 0.0
+               for v in snap["repro_replica_unacked_entries"].values())
+    # a fresh write is immediately visible at the next scrape
+    nodes[0].update("late", MVRegister, "write_delta", ids[0], 1)
+    assert (reg.snapshot()["repro_replica_delta_buffer_depth"][ids[0]]
+            == len(nodes[0].entries))
+
+
+def test_ack_lag_probe_resolves_after_acks():
+    ids = ["a", "b", "c"]
+    sim = Simulator(NetConfig(seed=3))
+    nodes = [sim.add_node(Replica(i, AWORSet.bottom(),
+                                  [j for j in ids if j != i], causal=True,
+                                  policy=make_policy("bp+rr"),
+                                  rng=random.Random(1)))
+             for i in ids]
+    reg = Registry()
+    probe = AckLagProbe(reg, nodes[0], clock=lambda: sim.time)
+    for k in range(3):
+        nodes[0].operation(lambda X, k=k: X.add_delta("a", f"x{k}"))
+        probe.note_write()
+    assert probe.poll() == 0                  # nothing acked yet
+    run_to_convergence(sim, nodes, interval=1.0)
+    assert probe.poll() == 3
+    snap = reg.snapshot()
+    assert snap["repro_ack_lag_seconds"]["a"]["count"] == 3
+    assert snap["repro_ack_pending_writes"]["a"] == 0.0
+
+
+def test_marker_lag_histogram_shared_family():
+    reg = Registry()
+    child = marker_lag_histogram(reg, node="gw0")
+    child.observe(0.2)
+    marker_lag_histogram(reg, node="gw0").observe(0.3)   # same child
+    snap = reg.snapshot()
+    assert snap["repro_marker_lag_seconds"]["gw0"]["count"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Kernel launch observability
+# ---------------------------------------------------------------------------
+
+def test_kernel_counters_snapshot_and_diff_only():
+    from repro.kernels import ops
+
+    assert not hasattr(ops.counters, "reset")
+    snap = ops.counters.snapshot()
+    ops.record_launch("probe_op")
+    diff = ops.counters.since(snap)
+    assert diff["launches"] == 1 and diff["h2d_bytes"] == 0
+
+
+def test_kernel_launch_hook_names_ops(monkeypatch):
+    import numpy as np
+    from repro.kernels import ops
+
+    tr = Tracer(node="kern")
+    uninstall = trace_kernel_launches(tr)
+    try:
+        x = np.zeros((2, 256), np.float32)
+        ops.chunk_digest_auto(x)
+    finally:
+        uninstall()
+    evs = [e for e in tr.events() if e["kind"] == "kernel_launch"]
+    assert evs and evs[-1]["op"] == "chunk_digest"
+    assert evs[-1]["h2d_bytes"] == x.nbytes
+    ops.record_launch("after_uninstall")      # hook removed: no emit
+    assert len(tr.events()) == len(evs)
+
+
+# ---------------------------------------------------------------------------
+# Scrape surface
+# ---------------------------------------------------------------------------
+
+def test_metrics_server_serves_both_views_over_sockets():
+    reg = Registry()
+    reg.counter("hits_total", "hits").inc(5)
+    reg.gauge("depth", "d").set(2.0)
+
+    async def scenario():
+        server = MetricsServer(reg)
+        addr = await server.start()
+        try:
+            text = await asyncio.to_thread(scrape, addr)
+            js = await asyncio.to_thread(scrape_json, addr)
+            with pytest.raises(RuntimeError, match="404"):
+                await asyncio.to_thread(scrape, addr, "/nope")
+            return text, js
+        finally:
+            await server.stop()
+
+    text, js = asyncio.run(scenario())
+    parsed = parse_prometheus(text)
+    assert parsed["hits_total"][""] == 5.0
+    assert js == {"hits_total": 5.0, "depth": 2.0}
+
+
+# ---------------------------------------------------------------------------
+# Analyzer on synthetic traces: each detector fires on its corruption
+# ---------------------------------------------------------------------------
+
+def _ev(kind, node, t, **f):
+    return {"t": t, "seq": f.pop("seq", 0), "node": node, "kind": kind,
+            **f}
+
+
+def test_redundancy_counts_wasted_ships():
+    trace = [
+        _ev("delta_ship", "a", 0.0, dst="b", bytes=100, keys=["k"],
+            full=False, tag=1),
+        _ev("delta_join", "b", 0.1, src="a", via="delta", bytes=100,
+            keys=["k"], joined=1),
+        _ev("delta_ship", "a", 0.2, dst="b", bytes=100, keys=["k"],
+            full=False, tag=1),
+        _ev("delta_join", "b", 0.3, src="a", via="delta", bytes=100,
+            keys=[], joined=0),
+    ]
+    red = redundancy(trace)
+    assert red["ratio"] == 2.0
+    assert red["redundant_joins"] == 1 and red["joins"] == 2
+
+
+def test_convergence_measures_lag_and_rounds():
+    trace = [
+        _ev("write", "a", 1.0, keys=["k"], tag=0, round=3),
+        _ev("delta_ship", "a", 1.5, dst="b", bytes=10, keys=["k"],
+            full=False, tag=1, round=4),
+        _ev("delta_join", "b", 2.0, src="a", via="delta", bytes=10,
+            keys=["k"], joined=1, round=1),
+        _ev("delta_ship", "a", 2.5, dst="c", bytes=10, keys=["k"],
+            full=False, tag=1, round=5),
+        _ev("delta_join", "c", 4.0, src="a", via="delta", bytes=10,
+            keys=["k"], joined=1, round=1),
+    ]
+    conv = convergence(trace)
+    assert conv["k"]["lag_s"] == 3.0          # last write → last join
+    assert conv["k"]["rounds"] == 2           # two distinct ship rounds
+    assert conv["k"]["nodes"] == ["a", "b", "c"]
+    assert conv["k"]["writers"] == ["a"]
+
+
+def test_anomaly_ack_without_and_above_ship():
+    trace = [
+        _ev("ack", "a", 0.5, src="b", tag=3, stale=False),
+        _ev("delta_ship", "a", 1.0, dst="c", bytes=10, keys=["k"],
+            full=False, tag=2),
+        _ev("ack", "a", 1.5, src="c", tag=9, stale=False),
+    ]
+    kinds = [a["kind"] for a in anomalies(trace)]
+    assert kinds.count("ack_without_ship") == 1
+    assert kinds.count("ack_above_ship") == 1
+
+
+def test_anomaly_ship_before_have_and_without_join():
+    trace = [
+        _ev("write", "a", 0.0, keys=["k"], tag=0),
+        _ev("delta_ship", "a", 0.1, dst="b", bytes=10, keys=["k"],
+            full=False, tag=1),
+        _ev("delta_ship", "b", 0.2, dst="a", bytes=10, keys=["k"],
+            full=False, tag=1),              # b never wrote/joined k
+    ]
+    kinds = [a["kind"] for a in anomalies(trace)]
+    assert "ship_before_have" in kinds
+    assert "ship_without_join" in kinds       # k never joined anywhere
+    # a full-state ship is exempt (bootstrap legitimately ships unknowns)
+    trace[2] = _ev("delta_ship", "b", 0.2, dst="a", bytes=10,
+                   keys=["k"], full=True)
+    assert "ship_before_have" not in [a["kind"] for a in anomalies(trace)]
+
+
+def test_anomaly_checks_disabled_on_truncation():
+    trace = [
+        _ev("write", "a", 0.0, keys=["k"], tag=0),
+        _ev("delta_ship", "b", 0.2, dst="a", bytes=10, keys=["k"],
+            full=False, tag=1, keys_truncated=True),
+    ]
+    kinds = [a["kind"] for a in anomalies(trace)]
+    assert kinds == ["keys_truncated"]        # no false positives
+
+
+def test_semantic_trace_is_timing_free():
+    fast = [
+        _ev("write", "a", 0.0, keys=["k"], tag=0),
+        _ev("delta_join", "b", 0.1, src="a", via="delta", bytes=5,
+            keys=["k"], joined=1),
+    ]
+    slow = [                                   # same story, other timing
+        _ev("write", "a", 7.0, keys=["k"], tag=0),
+        _ev("delta_join", "b", 93.0, src="c", via="digest-resp",
+            bytes=999, keys=["k"], joined=1),
+        _ev("delta_join", "b", 94.0, src="a", via="delta", bytes=5,
+            keys=[], joined=0),                # redundant: not semantic
+    ]
+    assert semantic_trace(fast) == semantic_trace(slow)
+    assert semantic_trace(fast) == {
+        "k": {"writes": {"a": 1}, "joined": ["a", "b"]}}
+
+
+# ---------------------------------------------------------------------------
+# The full loop on real sockets: traced cluster, probes, scrape, analyze
+# ---------------------------------------------------------------------------
+
+def test_traced_socket_cluster_scrape_and_analyze():
+    from repro.net import start_cluster, stop_cluster, wait_converged
+
+    tracers = {}
+
+    def tf(node_id):
+        tracers[node_id] = Tracer(node=node_id)
+        return tracers[node_id]
+
+    async def scenario():
+        nodes = await start_cluster(3, transport="udp", tick=0.03,
+                                    seed=61, tracer_factory=tf)
+        try:
+            addrs = []
+            for n in nodes:
+                n.export_metrics()
+                addrs.append(await n.serve_metrics())
+            for k, n in enumerate(nodes):
+                n.update(f"s{k}", MVRegister, "write_delta", n.id, "done")
+            await wait_converged(nodes, timeout=30.0)
+            await asyncio.sleep(0.2)          # let trailing acks land
+            texts = [await asyncio.to_thread(scrape, a) for a in addrs]
+            return [n.id for n in nodes], texts
+        finally:
+            await stop_cluster(nodes)
+
+    ids, texts = asyncio.run(scenario())
+    for nid, text in zip(ids, texts):
+        parsed = parse_prometheus(text)
+        assert parsed["repro_net_frames_sent_total"][f'node="{nid}"'] > 0
+        assert f'node="{nid}"' in parsed["repro_net_bytes_sent_per_second"]
+        assert f'node="{nid}"' in parsed["repro_replica_delta_buffer_depth"]
+        assert parsed["repro_ack_lag_seconds_count"][f'node="{nid}"'] >= 1
+    rep = report(list(tracers.values()), expect_converged=ids)
+    assert rep["anomaly_list"] == []
+    assert rep["unconverged_keys"] == {}
+    assert rep["redundancy"]["ratio"] >= 1.0
